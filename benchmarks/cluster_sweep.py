@@ -1,0 +1,37 @@
+"""Paper Figs. 9-10 full cluster sweep: execution time and communication
+across p = 8..1024 (the U-shaped communication trend beyond 128 clusters
+from §6.2.4)."""
+from __future__ import annotations
+
+from repro.core import run_pipeline
+
+from .common import emit, graphs, timed
+
+P_SWEEP = (8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def run(scale: str = "reduced", names=None) -> list[dict]:
+    rows = []
+    for g in graphs(scale, names or ["fft", "kmeans"]):
+        for m in ("compnet", "wb_libra"):
+            times, comms = [], []
+            for p in P_SWEEP:
+                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                times.append(rep.exec_time)
+                comms.append(rep.data_comm_bytes)
+                rows.append({"graph": g.name, "method": m, "p": p,
+                             "exec": rep.exec_time,
+                             "comm": rep.data_comm_bytes})
+                emit(f"cluster_sweep/{g.name}/{m}/p{p}", us,
+                     f"exec_s={rep.exec_time:.3e};"
+                     f"comm_bytes={rep.data_comm_bytes:.3e}")
+            # §6.2.4 trend: comm eventually turns up (sync takes over)
+            emit(f"cluster_sweep/{g.name}/{m}/comm_trend", 0.0,
+                 f"comm_p8={comms[0]:.3e};comm_min={min(comms):.3e};"
+                 f"comm_p1024={comms[-1]:.3e};"
+                 f"u_shape={comms[-1] > min(comms)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

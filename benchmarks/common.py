@@ -1,0 +1,28 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.core import all_benchmark_names, build_graph
+
+VERTEX_METHODS = ("pg", "libra", "w_pg", "wb_pg", "w_libra", "wb_libra")
+EDGE_METHODS = ("compnet", "metis")
+ALL_METHODS = EDGE_METHODS + VERTEX_METHODS
+
+CACHE_DIR = ".cache/benchgraphs"
+
+
+def graphs(scale: str = "reduced", names=None):
+    for name in (names or all_benchmark_names()):
+        yield build_graph(name, scale=scale, cache_dir=CACHE_DIR)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    """Assignment-required CSV line: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Paper Tables 8-9 / Fig. 10: inter-core data communication per method,
+normalised to CompNet = 100% (vertex cuts land well below 100%, METIS
+above — the paper's §6.2.4 finding)."""
+from __future__ import annotations
+
+from repro.core import run_pipeline
+
+from .common import ALL_METHODS, emit, graphs, timed
+
+P_VALUES = (8, 64, 1024)
+
+
+def run(scale: str = "reduced", names=None,
+        p_values=P_VALUES) -> list[dict]:
+    rows = []
+    for g in graphs(scale, names):
+        for p in p_values:
+            base = None
+            for m in ALL_METHODS:
+                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                if m == "compnet":
+                    base = rep
+                pct = 100.0 * rep.data_comm_bytes / base.data_comm_bytes
+                rows.append({"graph": g.name, "p": p, "method": m,
+                             "comm_bytes": rep.data_comm_bytes,
+                             "pct_of_compnet": pct})
+                emit(f"data_comm/{g.name}/p{p}/{m}", us,
+                     f"bytes={rep.data_comm_bytes:.3e};"
+                     f"pct_of_compnet={pct:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

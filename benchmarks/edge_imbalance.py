@@ -1,0 +1,27 @@
+"""Paper Table 5: edge-weight imbalance of the six vertex-cut methods
+(λ=1 for the WB variants, to match the paper's setting)."""
+from __future__ import annotations
+
+from repro.core import vertex_cut
+
+from .common import VERTEX_METHODS, emit, graphs, timed
+
+
+def run(scale: str = "reduced", p: int = 8, names=None) -> list[dict]:
+    rows = []
+    for g in graphs(scale, names):
+        row = {"graph": g.name}
+        for m in VERTEX_METHODS:
+            r, us = timed(vertex_cut, g, p, method=m, lam=1.0)
+            row[m] = r.edge_weight_imbalance
+            emit(f"edge_imbalance/{g.name}/{m}", us,
+                 f"imbalance={r.edge_weight_imbalance:.5f}")
+        # the paper's two key orderings
+        row["wb_beats_w_libra"] = row["wb_libra"] <= row["w_libra"] + 1e-9
+        row["wb_beats_w_pg"] = row["wb_pg"] <= row["w_pg"] + 1e-9
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Tables 6-9 in ONE pass: execution time and data communication
+come from the same (partition, mapping, simulate) pipeline, so computing
+them together halves the cost of the full-scale runs."""
+from __future__ import annotations
+
+from repro.core import run_pipeline
+
+from .common import ALL_METHODS, emit, graphs, timed
+
+P_VALUES = (8, 64, 1024)
+
+
+def run(scale: str = "reduced", names=None, p_values=P_VALUES):
+    rows = []
+    for g in graphs(scale, names):
+        for p in p_values:
+            base = None
+            for m in ALL_METHODS:
+                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                if m == "compnet":
+                    base = rep
+                speed = base.exec_time / rep.exec_time
+                pct = 100.0 * rep.data_comm_bytes / base.data_comm_bytes
+                rows.append({"graph": g.name, "p": p, "method": m,
+                             "exec_time": rep.exec_time,
+                             "speedup_vs_compnet": speed,
+                             "pct_of_compnet": pct})
+                emit(f"execution_time/{g.name}/p{p}/{m}", us,
+                     f"exec_s={rep.exec_time:.3e};"
+                     f"speedup_vs_compnet={speed:.2f}x")
+                emit(f"data_comm/{g.name}/p{p}/{m}", 0.0,
+                     f"bytes={rep.data_comm_bytes:.3e};"
+                     f"pct_of_compnet={pct:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Tables 6-7 / Fig. 9: simulated execution time per method and
+cluster count on the NUMA machine model, normalised to CompNet (the
+paper's headline: WB-Libra 1.56x / 1.86x over CompNet at 8 / 1024)."""
+from __future__ import annotations
+
+from repro.core import run_pipeline
+
+from .common import ALL_METHODS, emit, graphs, timed
+
+P_VALUES = (8, 64, 1024)
+
+
+def run(scale: str = "reduced", names=None,
+        p_values=P_VALUES) -> list[dict]:
+    rows = []
+    for g in graphs(scale, names):
+        for p in p_values:
+            base = None
+            for m in ALL_METHODS:
+                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                if m == "compnet":
+                    base = rep
+                speed = base.exec_time / rep.exec_time
+                rows.append({"graph": g.name, "p": p, "method": m,
+                             "exec_time": rep.exec_time,
+                             "speedup_vs_compnet": speed})
+                emit(f"execution_time/{g.name}/p{p}/{m}", us,
+                     f"exec_s={rep.exec_time:.3e};"
+                     f"speedup_vs_compnet={speed:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""Shim: the loop-aware HLO cost analyzer lives in repro.analysis."""
+from repro.analysis.hlo_cost import HLOCost, analyze_hlo  # noqa: F401

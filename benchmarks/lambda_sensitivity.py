@@ -1,0 +1,40 @@
+"""Paper Fig. 11: execution time of WB-Libra / WB-PG as λ grows from 1.
+The W-* variants (no bound) are the asymptote; the paper recommends λ=1."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import run_pipeline
+
+from .common import emit, graphs, timed
+
+LAMBDAS = (1.0, 1.0004, 1.0008, 1.0012, 1.01, 1.1, 2.0)
+
+
+def run(scale: str = "reduced", names=None, p: int = 8) -> list[dict]:
+    rows = []
+    names = names or ["mandel", "md", "nn", "neuron", "strassen16"]
+    for g in graphs(scale, names):
+        for fam in ("libra", "pg"):
+            # unbounded asymptote
+            (_, _, w_rep), _ = timed(run_pipeline, g, p, f"w_{fam}")
+            times = []
+            for lam in LAMBDAS:
+                (part, mapping, rep), us = timed(
+                    run_pipeline, g, p, f"wb_{fam}", lam=lam)
+                times.append(rep.exec_time)
+                rows.append({"graph": g.name, "family": fam, "lam": lam,
+                             "exec_time": rep.exec_time,
+                             "w_variant_time": w_rep.exec_time})
+                emit(f"lambda_sensitivity/{g.name}/wb_{fam}/lam{lam}", us,
+                     f"exec_s={rep.exec_time:.3e};"
+                     f"w_variant_s={w_rep.exec_time:.3e}")
+            trend_up = times[-1] >= times[0] - 1e-12
+            emit(f"lambda_sensitivity/{g.name}/wb_{fam}/trend", 0.0,
+                 f"lam1_s={times[0]:.3e};lam_max_s={times[-1]:.3e};"
+                 f"degrades_with_lambda={trend_up}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

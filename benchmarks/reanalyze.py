@@ -1,0 +1,39 @@
+"""Re-run the loop-aware HLO analysis over cached dry-run HLO dumps
+(dryrun_hlo/*.hlo.gz) and refresh the metrics in dryrun_results.json —
+lets the cost model iterate without recompiling 64 cells."""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import sys
+
+from repro.analysis import analyze_hlo
+
+
+def main(results="dryrun_results.json", hlo_dir="dryrun_hlo") -> None:
+    with open(results) as f:
+        recs = json.load(f)
+    n = 0
+    for rec in recs:
+        if not rec.get("ok"):
+            continue
+        tag = rec["cell"].replace("/", "_") + "_" + rec["mesh"]
+        path = os.path.join(hlo_dir, tag + ".hlo.gz")
+        if not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            la = analyze_hlo(f.read())
+        rec["hlo_flops"] = la.flops
+        rec["hlo_hbm_bytes"] = la.hbm_bytes
+        rec["hlo_collective_bytes"] = la.collective_bytes
+        rec["hlo_collective_bytes_bf16eq"] = la.collective_bytes_bf16eq
+        rec["hlo_collective_counts"] = la.collective_counts
+        n += 1
+    with open(results, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

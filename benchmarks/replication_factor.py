@@ -1,0 +1,33 @@
+"""Paper Fig. 8: replication factor of the four greedy vertex cuts vs.
+the Eq. (10) random-cut theoretical upper bound, across cluster counts."""
+from __future__ import annotations
+
+from repro.core import vertex_cut
+from repro.core.powerlaw import expected_replication_random_empirical
+
+from .common import emit, graphs, timed
+
+P_VALUES = (8, 32, 128)
+METHODS = ("w_pg", "wb_pg", "w_libra", "wb_libra")
+
+
+def run(scale: str = "reduced", names=None) -> list[dict]:
+    rows = []
+    for g in graphs(scale, names):
+        deg = g.degrees()
+        active = deg[deg > 0]
+        for p in P_VALUES:
+            bound = expected_replication_random_empirical(active, p)
+            for m in METHODS:
+                r, us = timed(vertex_cut, g, p, method=m)
+                rf = r.replication_factor_active
+                rows.append({"graph": g.name, "p": p, "method": m,
+                             "rf": rf, "bound": bound})
+                emit(f"replication_factor/{g.name}/p{p}/{m}", us,
+                     f"rf={rf:.3f};eq10_bound={bound:.3f};"
+                     f"under_bound={rf <= bound + 1e-9}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,134 @@
+"""Roofline analysis per (arch × shape × mesh) from the dry-run artifacts.
+
+Terms (per chip, per step; TPU v5e constants):
+  compute    = HLO_FLOPs / peak_FLOPs           (197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / link_bw       (~50 GB/s/link ICI;
+               the 'pod' axis share rides DCN at ~25 GB/s/host)
+
+HLO_FLOPs/bytes come from the loop-aware analyzer (repro.analysis) over
+the SPMD-partitioned module — i.e. already per-device; collective bytes
+likewise.  MODEL_FLOPS = 6·N·D (training, dense) or 6·N_active·D (MoE);
+2·N·D for single-token decode; the ratio MODEL_FLOPS/HLO_FLOPs measures
+how much compiled compute is useful (remat/dispatch waste shows up here).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+DCN_BW = 25e9                # B/s per host (pod axis)
+
+
+def _attention_flops(cfg, sc) -> float:
+    """Quadratic attention term (2 matmuls of S×S per head), window-
+    limited for local layers — dominates MODEL_FLOPS at 32k context."""
+    if cfg.attention_free:
+        return 0.0
+    B, S = sc.global_batch, sc.seq_len
+    pattern = list(cfg.layer_pattern)
+    per_pos = 0.0
+    for i in range(cfg.n_layers):
+        kind = pattern[i % len(pattern)]
+        if kind in ("rec", "rwkv"):
+            continue
+        window = cfg.local_window if (
+            kind == "local" or (kind == "attn" and cfg.family == "hybrid")
+        ) else None
+        if sc.kind == "decode":
+            ctx = min(window, S) if window else S
+        else:
+            ctx = min(window, S) if window else S / 2  # causal average
+        hd = cfg.head_dim
+        if cfg.use_mla:
+            hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim \
+                + cfg.v_head_dim
+        per_pos += 2.0 * 2.0 * cfg.n_heads * hd * ctx
+    n_q = B if sc.kind == "decode" else B * S
+    total = per_pos * n_q
+    if cfg.n_encoder_layers and sc.kind != "decode":
+        total += (2.0 * 2.0 * cfg.n_heads * cfg.head_dim * S / 2
+                  * B * S * cfg.n_encoder_layers)
+    return total
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    tokens = sc.global_batch * sc.seq_len
+    attn = _attention_flops(cfg, sc)
+    if sc.kind == "train":
+        return 6.0 * n_active * tokens + 3.0 * attn
+    if sc.kind == "prefill":
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * sc.global_batch + attn
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    arch, shape = rec["cell"].split("/")
+    n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops = rec.get("hlo_flops", 0.0)
+    hbm = rec.get("hlo_hbm_bytes", 0.0)
+    coll = rec.get("hlo_collective_bytes", {}) or {}
+    coll_total = sum(coll.values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape) / n_chips
+    useful = mf / flops if flops > 0 else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model FLOP-time over the bounding term
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "cell": rec["cell"], "mesh": rec["mesh"], "kind": rec["kind"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf, "hlo_flops": flops,
+        "useful_ratio": useful, "roofline_fraction": frac,
+        "collective_breakdown": coll,
+        "temp_bytes_per_dev": rec.get("memory", {}).get("temp_bytes", -1),
+        "arg_bytes_per_dev": rec.get("memory", {}).get("argument_bytes", -1),
+    }
+
+
+def load_results(path: str = "dryrun_results.json") -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    # last ok record wins per (cell, mesh)
+    latest: dict = {}
+    for r in results:
+        if r.get("ok"):
+            latest[(r["cell"], r["mesh"])] = r
+    return [analyze_record(r) for r in latest.values()]
+
+
+def run(path: str = "dryrun_results.json") -> list[dict]:
+    rows = [r for r in load_results(path) if r]
+    rows.sort(key=lambda r: (r["mesh"], r["cell"]))
+    for r in rows:
+        print(f"roofline/{r['cell']}/{r['mesh']},0.0,"
+              f"dominant={r['dominant']};"
+              f"compute_s={r['t_compute_s']:.3e};"
+              f"memory_s={r['t_memory_s']:.3e};"
+              f"collective_s={r['t_collective_s']:.3e};"
+              f"useful_ratio={r['useful_ratio']:.3f};"
+              f"roofline_fraction={r['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

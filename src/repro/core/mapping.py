@@ -1,0 +1,244 @@
+"""Memory-centric run-time mapping — paper §5 (Algorithm 2).
+
+Maps partitioner clusters onto a multi-core NUMA platform modelled as a
+2-D mesh NoC (paper Table 2: mesh topology, XY routing).  The three
+factors of Fig. 7 drive the greedy decisions:
+
+  factor 1 — clusters referencing the same data structures -> same core
+             (avoids cache-coherence fetches and block memory ops),
+             capped by a per-core cluster threshold (=4 in the paper);
+  factor 2 — communicating clusters -> adjacent cores (short XY routes);
+  factor 3 — independent clusters  -> different mesh regions
+             (architecture decomposition spreads traffic).
+
+The same `Machine` abstraction doubles as the TPU-pod ICI mesh in
+`launch/mesh.py`, where "cores" are chips and "NUMA regions" are pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Machine", "MappingResult", "memory_centric_mapping",
+           "cluster_interaction_graphs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """A rows×cols mesh of cores with NUMA regions (quadrant decomposition).
+
+    Latency/bandwidth defaults follow paper Table 2 scaled to seconds:
+    2.4 GHz cores, 8 GB/s memory bandwidth, per-hop NoC latency.
+    """
+    rows: int
+    cols: int
+    n_regions: int = 4
+    hop_latency: float = 5e-9          # per-hop wire+router latency (s)
+    link_bw: float = 8e9               # NoC link bandwidth (B/s)
+    local_mem_bw: float = 8e9          # DRAM bandwidth (B/s), Table 2
+    coherence_penalty: float = 60e-9   # cache-line fetch from remote L1/L2
+    mshr_overlap: int = 16             # outstanding misses (Table 2: 16 MSHRs)
+    cluster_threshold: int = 4         # max clusters per core (paper §5.2)
+
+    @property
+    def n_cores(self) -> int:
+        return self.rows * self.cols
+
+    def coords(self, core: int) -> tuple[int, int]:
+        return divmod(core, self.cols)
+
+    def hops(self, a: int, b: int) -> int:
+        """XY-routing hop count between cores a and b."""
+        ra, ca = self.coords(a)
+        rb, cb = self.coords(b)
+        return abs(ra - rb) + abs(ca - cb)
+
+    def region_of(self, core: int) -> int:
+        """Grid-style architecture decomposition (factor 3)."""
+        r, c = self.coords(core)
+        rr = max(1, int(np.sqrt(self.n_regions)))
+        cc = max(1, self.n_regions // rr)
+        return (r * rr // self.rows) * cc + (c * cc // self.cols)
+
+    @classmethod
+    def for_clusters(cls, p: int, max_cores: int = 64, **kw) -> "Machine":
+        """Near-square mesh with min(p, max_cores) cores.
+
+        The paper scales clusters 8→1024 on a *fixed* multi-core platform;
+        when p exceeds the core budget, clusters share cores (the per-core
+        threshold grows accordingly).
+        """
+        n = min(p, max_cores)
+        rows = int(np.ceil(np.sqrt(n)))
+        cols = int(np.ceil(n / rows))
+        kw.setdefault("cluster_threshold",
+                      max(4, int(np.ceil(p / (rows * cols)))))
+        return cls(rows=rows, cols=cols, **kw)
+
+
+@dataclasses.dataclass
+class MappingResult:
+    machine: Machine
+    core_of: np.ndarray           # int32[P] cluster -> core
+    p: int
+
+    def clusters_on(self, core: int) -> np.ndarray:
+        return np.nonzero(self.core_of == core)[0]
+
+    @property
+    def cores_used(self) -> int:
+        return len(np.unique(self.core_of))
+
+
+# ---------------------------------------------------------------------- #
+# interaction graphs from a vertex cut result
+# ---------------------------------------------------------------------- #
+def cluster_interaction_graphs(replicas: list, p: int,
+                               vertex_bytes: np.ndarray | None = None,
+                               pairwise_cap: int = 64
+                               ) -> tuple[np.ndarray, np.ndarray]:
+    """Derive (comm[P,P], shared_mem[P,P]) from the replica sets A(v).
+
+    Replica synchronisation is star-shaped from the owner (lowest cluster id
+    in A(v)) to each replica — the only inter-cluster traffic of a vertex
+    cut.  `shared_mem` counts vertices whose data both clusters reference
+    (drives factor 1).  Vertices replicated to more than `pairwise_cap`
+    clusters are effectively global data structures; their O(|A|^2) shared
+    pairs are skipped (every core shares them anyway) while their star
+    traffic is still counted.
+    """
+    comm = np.zeros((p, p))
+    shared = np.zeros((p, p))
+    for v, a in enumerate(replicas):
+        if not a:
+            continue
+        members = sorted(a)
+        # diagonal: total vertices each cluster references (overlap denom.)
+        for x in members:
+            shared[x, x] += 1
+        if len(members) < 2:
+            continue
+        b = 1.0 if vertex_bytes is None else float(vertex_bytes[v])
+        owner = members[0]
+        for r in members[1:]:
+            comm[owner, r] += b
+            comm[r, owner] += b
+        if len(members) <= pairwise_cap:
+            for i, x in enumerate(members):
+                for y in members[i + 1:]:
+                    shared[x, y] += 1
+                    shared[y, x] += 1
+    return comm, shared
+
+
+# ---------------------------------------------------------------------- #
+# Algorithm 2
+# ---------------------------------------------------------------------- #
+def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
+                           machine: Machine | None = None,
+                           cluster_order: np.ndarray | None = None,
+                           colocate_min_overlap: float = 0.5
+                           ) -> MappingResult:
+    """Greedy cluster→core mapping per Algorithm 2 (O(P·k), k = peers).
+
+    Args:
+      comm:   [P,P] inter-cluster communication volume (factor 2 signal).
+      shared: [P,P] shared-data-structure counts (factor 1 signal); the
+        diagonal holds each cluster's own referenced-vertex count.
+      machine: target platform; default smallest mesh with >= P cores.
+      cluster_order: schedulable order (run queue); default by descending
+        total interaction so hub clusters anchor placement.
+      colocate_min_overlap: factor-1 colocation (same core) only fires when
+        the shared-data overlap exceeds this fraction of the smaller
+        cluster's references — `ClusterFromMem` in Algorithm 2 targets
+        clusters working on the *same data structure*, not any two clusters
+        that happen to share a replica of a hub vertex.
+    """
+    p = comm.shape[0]
+    machine = machine or Machine.for_clusters(p)
+    n_cores = machine.n_cores
+
+    off_diag = shared - np.diag(np.diag(shared))
+    if cluster_order is None:
+        cluster_order = np.argsort(-(comm.sum(1) + off_diag.sum(1)),
+                                   kind="stable")
+
+    core_of = np.full(p, -1, dtype=np.int32)
+    core_count = np.zeros(n_cores, dtype=np.int64)
+    regions = [machine.region_of(c) for c in range(n_cores)]
+    n_regions = max(regions) + 1
+    region_rr = 0  # round-robin cursor for architecture decomposition
+
+    def nearby_core(anchor: int) -> int:
+        """Least-occupied *other* core, ties broken by distance to `anchor`
+        (factor 2: communicating clusters on adjacent processors).  Occupancy
+        is the primary key — a core executing another cluster serializes it,
+        which costs orders of magnitude more than a NoC hop, so "nearby"
+        means the closest *available* processor."""
+        best, best_key = anchor, None
+        for c in range(n_cores):
+            if c == anchor or core_count[c] >= machine.cluster_threshold:
+                continue
+            key = (core_count[c], machine.hops(anchor, c))
+            if best_key is None or key < best_key:
+                best, best_key = c, key
+        return best if best_key is not None else int(np.argmin(core_count))
+
+    def diff_region_core(avoid_region: int | None) -> int:
+        """Least-utilised core in a different region (factor 3)."""
+        nonlocal region_rr
+        for off in range(n_regions):
+            reg = (region_rr + off) % n_regions
+            if avoid_region is not None and reg == avoid_region:
+                continue
+            cands = [c for c in range(n_cores) if regions[c] == reg]
+            cands = [c for c in cands
+                     if core_count[c] < machine.cluster_threshold]
+            if cands:
+                region_rr = (reg + 1) % n_regions
+                return min(cands, key=lambda c: core_count[c])
+        return int(np.argmin(core_count))
+
+    own = np.maximum(np.diag(shared), 1.0)
+    for cl in cluster_order:
+        cl = int(cl)
+        placed = core_of >= 0
+        # factor 1: already-placed peer sharing a dominant data structure
+        mem_peer = -1
+        if placed.any():
+            srow = np.where(placed, off_diag[cl], -1.0)
+            j = int(np.argmax(srow))
+            if srow[j] > colocate_min_overlap * min(own[cl], own[j]):
+                mem_peer = j
+        # factor 2: strongest already-placed communication peer
+        ipc_peer = -1
+        if placed.any():
+            crow = np.where(placed, comm[cl], -1.0)
+            j = int(np.argmax(crow))
+            if crow[j] > 0:
+                ipc_peer = j
+
+        if mem_peer >= 0:
+            tgt = int(core_of[mem_peer])
+            if core_count[tgt] < machine.cluster_threshold:
+                core_of[cl] = tgt           # factor 1: colocate
+            else:
+                core_of[cl] = nearby_core(tgt)
+        elif ipc_peer >= 0:
+            core_of[cl] = nearby_core(int(core_of[ipc_peer]))  # factor 2
+        else:
+            avoid = (machine.region_of(int(core_of[ipc_peer]))
+                     if ipc_peer >= 0 else None)
+            core_of[cl] = diff_region_core(avoid)               # factor 3
+        core_count[core_of[cl]] += 1
+
+    return MappingResult(machine=machine, core_of=core_of, p=p)
+
+
+def round_robin_mapping(p: int, machine: Machine | None = None
+                        ) -> MappingResult:
+    """Locality-oblivious baseline mapping (for ablations)."""
+    machine = machine or Machine.for_clusters(p)
+    core_of = (np.arange(p) % machine.n_cores).astype(np.int32)
+    return MappingResult(machine=machine, core_of=core_of, p=p)

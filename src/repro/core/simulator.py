@@ -1,0 +1,200 @@
+"""Deterministic NUMA multi-core cost simulator (paper §6 evaluation rig).
+
+The paper evaluates partitions by executing them in gem5 on an out-of-order
+NUMA mesh (Table 2).  gem5 is out of scope here; instead we charge each
+cluster an analytic cost on the same machine model used by the mapper:
+
+  compute   — Σ of edge weights (weights *are* memory-op time, §3) plus a
+              fixed per-instruction issue cost; clusters sharing a core
+              serialize (the paper's threshold=4 colocations).
+  replica sync (vertex cut) — for every cut vertex, its owner pushes the
+              value to each replica: hops·hop_latency + bytes/link_bw,
+              charged to the receiving core; zero if owner and replica
+              share a core (factor-1 benefit).
+  cut edges (edge cut) — every inter-cluster edge moves its payload
+              between the producing and consuming cores.
+  synchronisation — critical-section/coherence traffic grows superlinearly
+              with the cluster count (the paper observes comm turning back
+              up beyond 128 clusters); modelled as σ·P·log2(P) messages.
+
+Outputs: overall execution time (max over cores + sync) and total
+inter-core data communication, the two quantities in Tables 6–9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .graph import IRGraph
+from .mapping import Machine, MappingResult, cluster_interaction_graphs
+from .vertex_cut import VertexCutResult
+from .edge_cut import EdgeCutResult
+
+__all__ = ["SimReport", "simulate", "vertex_bytes_model"]
+
+# -- cost constants (machine-model scale; Table 2: 2.4 GHz OoO cores) ----
+CYCLE = 1.0 / 2.4e9                   # edge weights are cycles (rdtsc units)
+INSTR_COST = 0.5 * CYCLE              # avg non-memory issue cost (s/instr)
+CACHE_LINE = 64.0                     # bytes moved per dependency/sync msg
+SYNC_MSG_BYTES = 64.0                 # one cache line per sync message
+SYNC_BASE = 100 * CYCLE               # critical-section entry cost (s)
+WEIGHT_TO_SECONDS = CYCLE             # edge-weight unit -> seconds
+
+
+@dataclasses.dataclass
+class SimReport:
+    graph_name: str
+    method: str
+    p: int
+    exec_time: float                  # seconds (modelled)
+    data_comm_bytes: float            # inter-core traffic
+    core_times: np.ndarray
+    sync_time: float
+    sync_bytes: float
+
+    def summary(self) -> dict:
+        return {"graph": self.graph_name, "method": self.method, "p": self.p,
+                "exec_time": self.exec_time,
+                "data_comm_bytes": self.data_comm_bytes}
+
+
+def vertex_bytes_model(g: IRGraph) -> np.ndarray:
+    """Bytes synced per vertex replica: one cache line per value (§6.2.4 —
+    the only vertex-cut traffic is replica synchronisation of cut vertices).
+    """
+    return np.full(g.n, CACHE_LINE)
+
+
+# ---------------------------------------------------------------------- #
+def simulate(g: IRGraph, partition, mapping: MappingResult) -> SimReport:
+    """Execute a partition (vertex- or edge-cut) on the mapped machine."""
+    if isinstance(partition, VertexCutResult):
+        return _simulate_vertex_cut(g, partition, mapping)
+    if isinstance(partition, EdgeCutResult):
+        return _simulate_edge_cut(g, partition, mapping)
+    raise TypeError(f"unsupported partition type {type(partition)}")
+
+
+def _per_cluster_compute(g: IRGraph, edge_cluster: np.ndarray,
+                         p: int) -> np.ndarray:
+    t = np.zeros(p)
+    np.add.at(t, edge_cluster, g.w * WEIGHT_TO_SECONDS + INSTR_COST)
+    return t
+
+
+def _core_compute(cluster_time: np.ndarray, mapping: MappingResult
+                  ) -> np.ndarray:
+    core_t = np.zeros(mapping.machine.n_cores)
+    np.add.at(core_t, mapping.core_of, cluster_time)
+    return core_t
+
+
+def _sync_model(p: int, n_cores: int) -> tuple[float, float]:
+    """Critical-section synchronisation cost/traffic, same for all methods."""
+    if p <= 1:
+        return 0.0, 0.0
+    rounds = p * math.log2(p)
+    sync_bytes = rounds * SYNC_MSG_BYTES * max(1.0, p / 256.0)
+    sync_time = rounds * SYNC_BASE / max(1, n_cores)
+    return sync_time, sync_bytes
+
+
+def _simulate_vertex_cut(g: IRGraph, r: VertexCutResult,
+                         mapping: MappingResult) -> SimReport:
+    mach = mapping.machine
+    cluster_t = _per_cluster_compute(g, r.assignment, r.p)
+    core_t = _core_compute(cluster_t, mapping)
+
+    vb = vertex_bytes_model(g)
+    core_wait = np.zeros(mach.n_cores)
+    # flatten (owner_core, dst_core, bytes) across all replica sets
+    owners, dsts, sizes = [], [], []
+    for v, a in enumerate(r.replicas):
+        if not a or len(a) < 2:
+            continue
+        members = sorted(a)
+        owners.extend([members[0]] * (len(members) - 1))
+        dsts.extend(members[1:])
+        sizes.extend([vb[v]] * (len(members) - 1))
+    if owners:
+        oc = mapping.core_of[np.asarray(owners)].astype(np.int64)
+        dc = mapping.core_of[np.asarray(dsts)].astype(np.int64)
+        b = np.asarray(sizes)
+        diff = oc != dc           # factor-1 colocation: coherence-free
+        oc, dc, b = oc[diff], dc[diff], b[diff]
+        hops = (np.abs(oc // mach.cols - dc // mach.cols)
+                + np.abs(oc % mach.cols - dc % mach.cols))
+        lat = hops * mach.hop_latency + mach.coherence_penalty
+        np.add.at(core_wait, dc,
+                  lat / mach.mshr_overlap + b / mach.link_bw)
+        comm_bytes = float(b.sum())
+    else:
+        comm_bytes = 0.0
+    sync_t, sync_b = _sync_model(r.p, mach.n_cores)
+    exec_time = float((core_t + core_wait).max() + sync_t)
+    return SimReport(g.name, r.method, r.p, exec_time,
+                     comm_bytes + sync_b, core_t + core_wait, sync_t, sync_b)
+
+
+def _simulate_edge_cut(g: IRGraph, r: EdgeCutResult,
+                       mapping: MappingResult) -> SimReport:
+    mach = mapping.machine
+    # edge executed at consumer's cluster
+    edge_cluster = r.parts[g.dst]
+    cluster_t = _per_cluster_compute(g, edge_cluster, r.p)
+    core_t = _core_compute(cluster_t, mapping)
+
+    cu = r.parts[g.src]
+    cv = r.parts[g.dst]
+    cross = cu != cv
+    core_wait = np.zeros(mach.n_cores)
+    src_cores = mapping.core_of[cu[cross]].astype(np.int64)
+    dst_cores = mapping.core_of[cv[cross]].astype(np.int64)
+    diff = src_cores != dst_cores
+    sc, dc = src_cores[diff], dst_cores[diff]
+    hops = (np.abs(sc // mach.cols - dc // mach.cols)
+            + np.abs(sc % mach.cols - dc % mach.cols))
+    lat = hops * mach.hop_latency + mach.coherence_penalty
+    np.add.at(core_wait, dc,
+              lat / mach.mshr_overlap + CACHE_LINE / mach.link_bw)
+    comm_bytes = float(len(sc) * CACHE_LINE)
+    sync_t, sync_b = _sync_model(r.p, mach.n_cores)
+    exec_time = float((core_t + core_wait).max() + sync_t)
+    return SimReport(g.name, r.method, r.p, exec_time,
+                     comm_bytes + sync_b, core_t + core_wait, sync_t, sync_b)
+
+
+# ---------------------------------------------------------------------- #
+def run_pipeline(g: IRGraph, p: int, method: str, lam: float = 1.0,
+                 machine: Machine | None = None, seed: int = 0):
+    """partition -> map -> simulate, returning (partition, mapping, report).
+
+    The end-to-end path of Fig. 1: structure analysis is already in `g`,
+    vertex/edge cut produces clusters, the memory-centric mapping schedules
+    them, and the simulator scores the result.
+    """
+    from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
+    from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut
+    from .mapping import memory_centric_mapping
+
+    machine = machine or Machine.for_clusters(p)
+    if method in ALGORITHMS:
+        part = _vertex_cut(g, p, method=method, lam=lam, seed=seed)
+        comm, shared = cluster_interaction_graphs(
+            part.replicas, p, vertex_bytes_model(g))
+        mapping = memory_centric_mapping(comm, shared, machine)
+    elif method in EDGE_CUT_METHODS:
+        part = _edge_cut(g, p, method=method, seed=seed)
+        # inter-cluster comm graph from cut edges (one line per dependency)
+        comm = np.zeros((p, p))
+        cu, cv = part.parts[g.src], part.parts[g.dst]
+        cross = cu != cv
+        np.add.at(comm, (cu[cross], cv[cross]), CACHE_LINE)
+        comm = comm + comm.T
+        mapping = memory_centric_mapping(comm, np.zeros_like(comm), machine)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    report = simulate(g, part, mapping)
+    return part, mapping, report

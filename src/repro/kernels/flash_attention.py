@@ -1,0 +1,141 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md §2): the online-softmax streaming
+algorithm is re-tiled for the TPU memory hierarchy — q/k/v blocks live in
+VMEM via BlockSpec, the (block_q × head_dim) accumulator stays in VMEM
+scratch across the k-grid, and block shapes are multiples of 128 so the
+MXU sees aligned matmuls.  Supports causal masking, sliding windows
+(gemma2/recurrentgemma local layers), logit softcapping (gemma2) and GQA
+(kv heads broadcast via the index map, so no repeated kv in HBM).
+
+Grid: (batch, q_heads, Sq/block_q, Sk/block_k) — the k axis is the
+innermost (sequential) dimension; softmax state (m, l) and the output
+accumulator are carried in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None,
+               softcap: float | None, block_q: int, block_k: int,
+               seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)              # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)              # [bk, d]
+    # zero padded kv rows (non-divisible seq): 0 * garbage would be NaN
+    kv_valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < seq_k
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                              # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                           # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                  # [bq, 1]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None,
+                    scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q [B, Sq, Hq, D], k/v [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    `interpret=True` executes the kernel body in Python on CPU (the
+    container target); on TPU pass interpret=False.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+
+    # [B, H, S, D] layout so blocks are (seq, head_dim) tiles in VMEM
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=groups: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=groups: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

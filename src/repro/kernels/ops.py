@@ -1,0 +1,159 @@
+"""jit-ready wrappers around the Pallas kernels with platform dispatch.
+
+Three implementations per op:
+  * "pallas"  — the TPU kernel (interpret-mode on CPU, compiled on TPU);
+  * "ref"     — the pure-jnp oracle (differentiable, used for training on
+                CPU and as the ground truth in tests);
+  * "chunked" — flash-semantics pure-jnp attention: lax.scan over kv
+                blocks with online softmax.  This is what long-context
+                paths lower in the dry-run, so `cost_analysis()` reports
+                flash-like memory traffic instead of a materialised
+                [B,H,S,S] logit tensor.
+
+`impl="auto"` picks: pallas on TPU; on CPU, ref for short sequences and
+chunked once Sk exceeds `CHUNK_THRESHOLD`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+from .rglru import rglru_scan as _rglru_pallas
+from .rwkv6 import rwkv6_scan as _rwkv6_pallas
+
+__all__ = ["attention", "rglru", "rwkv6", "on_tpu"]
+
+CHUNK_THRESHOLD = 1024
+_KV_BLOCK = 512
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------- #
+# attention
+# ---------------------------------------------------------------------- #
+def _attention_chunked(q, k, v, *, causal, window, softcap, scale,
+                       q_offset=0, kv_len=None, kv_block=_KV_BLOCK):
+    """Online-softmax attention, scanned over kv blocks (flash semantics).
+    Supports distinct qk and v head dims (MLA: 192 vs 128)."""
+    B, Sq, Hq, Dk = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    groups = Hq // Hkv
+    scale = scale if scale is not None else Dk ** -0.5
+    nblocks = -(-Sk // kv_block)
+    pad = nblocks * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = q.astype(jnp.float32) * scale
+    kb = k.reshape(B, nblocks, kv_block, Hkv, Dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblocks, kv_block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def step(carry, blk):
+        m, l, acc, bi = carry
+        kblk, vblk = blk                              # [B, bk, Hkv, D]
+        kblk = jnp.repeat(kblk.astype(jnp.float32), groups, axis=2)
+        vblk = jnp.repeat(vblk.astype(jnp.float32), groups, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kblk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = bi * kv_block + jnp.arange(kv_block)
+        mask = k_pos[None, :] < Sk
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(-1, keepdims=True)
+        acc = acc * alpha.swapaxes(1, 2) + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vblk)
+        return (m_new, l, acc, bi + 1), None
+
+    m0 = jnp.full((B, Hq, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hq, Dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l).swapaxes(1, 2)    # [B, Sq, Hq, 1]
+    return (acc / l).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              softcap: float | None = None, scale: float | None = None,
+              q_offset=0, kv_len=None, impl: str = "auto") -> jax.Array:
+    """Unified attention entry point used by every model."""
+    if impl == "auto":
+        if on_tpu():
+            impl = "pallas"
+        elif k.shape[1] > CHUNK_THRESHOLD:
+            impl = "chunked"
+        else:
+            impl = "ref"
+    if impl == "pallas":
+        # static offsets only in the kernel path; fall back otherwise
+        if isinstance(q_offset, int) and kv_len is None:
+            return _flash(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale,
+                          interpret=not on_tpu())
+        impl = "chunked"
+    if impl == "chunked":
+        return _attention_chunked(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  q_offset=q_offset, kv_len=kv_len)
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  q_offset=q_offset, kv_len=kv_len)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------- #
+# recurrences
+# ---------------------------------------------------------------------- #
+def rglru(x, a, h0=None, impl: str = "auto"):
+    """RG-LRU scan; returns (h, h_last)."""
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "pallas":
+        return _rglru_pallas(x, a, h0, interpret=not on_tpu())
+    return _ref.rglru_ref(x, a, h0=h0)
+
+
+def rwkv6(r, k, v, w, u, s0=None, impl: str = "auto"):
+    """RWKV6 WKV scan; returns (out, state_last).
+
+    "auto" uses the chunk-parallel formulation for sequences (state
+    carried once per 64 steps; MXU matmuls — EXPERIMENTS §Perf iteration
+    on rwkv6-7b/train_4k) and the per-step form for single-token decode.
+    """
+    if impl == "auto":
+        if on_tpu():
+            impl = "pallas"
+        elif r.shape[1] > 1:
+            impl = "chunked"
+        else:
+            impl = "ref"
+    if impl == "pallas":
+        return _rwkv6_pallas(r, k, v, w, u, s0, interpret=not on_tpu())
+    if impl == "chunked":
+        S = r.shape[1]
+        chunk = 64 if S % 64 == 0 else (S if S <= 64 else 1)
+        if chunk > 1:
+            sub = 8 if chunk % 8 == 0 else chunk
+            return _ref.rwkv6_chunked(r, k, v, w, u, s0=s0, chunk=chunk,
+                                      subchunk=sub)
+        impl = "ref"
+    return _ref.rwkv6_ref(r, k, v, w, u, s0=s0)

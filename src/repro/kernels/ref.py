@@ -1,0 +1,202 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth (tests sweep shapes/dtypes and
+assert_allclose against them) and the CPU execution path (the Pallas
+kernels target TPU; on CPU they run in interpret mode or fall back here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "rglru_ref", "rwkv6_ref", "rwkv6_chunked"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: int | None = None,
+                  softcap: float | None = None,
+                  scale: float | None = None,
+                  q_offset: int = 0,
+                  kv_len: jax.Array | None = None) -> jax.Array:
+    """Multi-head attention with GQA, sliding window and logit softcap.
+
+    Shapes: q [B, Sq, Hq, D], k/v [B, Sk, Hkv, D] with Hq % Hkv == 0.
+    `q_offset` is the absolute position of q[:, 0] (decode: Sq=1,
+    q_offset=pos).  `kv_len` optionally masks cache positions >= kv_len.
+    Computation in float32, result cast back to q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    groups = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads for GQA
+    kf = jnp.repeat(kf, groups, axis=2)
+    vf = jnp.repeat(vf, groups, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def rglru_ref(x: jax.Array, a: jax.Array, reset: jax.Array | None = None,
+              h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU linear recurrence (Griffin / RecurrentGemma):
+
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t
+
+    Shapes: x, a [B, S, D] (a in (0,1), already gated); returns
+    (h [B, S, D], h_last [B, D]).  float32 internally.
+    """
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    gated = jnp.sqrt(jnp.clip(1.0 - af * af, 0.0, 1.0)) * xf
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:1] + x.shape[2:], jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (af.swapaxes(0, 1), gated.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype), h_last.astype(x.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 (Finch) WKV recurrence with data-dependent decay.
+
+    Per head with state S [D_k, D_v]:
+
+        out_t = r_t @ (S + u^T ⊙ (k_t^T v_t))
+        S    <- diag(w_t) S + k_t^T v_t
+
+    Shapes: r/k/w [B, S, H, Dk], v [B, S, H, Dv], u [H, Dk].
+    Returns (out [B, S, H, Dv], S_last [B, H, Dk, Dv]).
+    """
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    def step(S, rkvw):
+        r_t, k_t, v_t, w_t = rkvw          # [B,H,Dk],[B,H,Dk],[B,H,Dv],[B,H,Dk]
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [B,H,Dk,Dv]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         S + uf[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    s_last, outs = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+         vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3)))
+    out = outs.transpose(1, 0, 2, 3)       # [B,S,H,Dv]
+    return out.astype(r.dtype), s_last.astype(jnp.float32)
+
+
+def rwkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, s0: jax.Array | None = None,
+                  chunk: int = 64, subchunk: int = 8
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel WKV6, exact w.r.t. `rwkv6_ref` (float32 rounding).
+
+    The per-timestep scan round-trips the Dk×Dv state through HBM every
+    step; this form carries state once per `chunk` steps (the lax.scan
+    carry) and handles the inside of a chunk with `chunk/subchunk`
+    unrolled sub-blocks that stay inside one fusion: within a sub-block
+    the pairwise decay is computed in a numerically safe factorised form
+    (exponent range bounded by subchunk·|log w| <= ~88), across
+    sub-blocks the state is passed in registers.  MXU-friendly masked
+    matmuls replace the rank-1 VPU updates — this is the production
+    training path (EXPERIMENTS §Perf) and mirrors the Pallas kernel's
+    VMEM-resident-state algorithm.
+    """
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+    L = min(chunk, S)
+    q = min(subchunk, L)
+    assert S % L == 0 and L % q == 0, (S, L, q)
+    n_chunks = S // L
+    n_sub = L // q
+    # keep the bulk arrays in their storage dtype (bf16 on the training
+    # path) — per-subchunk tiles are upcast inside sub_block, which cuts
+    # four full-sequence f32 copies per layer (EXPERIMENTS §Perf iter 2)
+    rf = r.reshape(B, n_chunks, L, H, Dk)
+    kf = k.reshape(B, n_chunks, L, H, Dk)
+    vf = v.reshape(B, n_chunks, L, H, Dv)
+    logw = w.reshape(B, n_chunks, L, H, Dk)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    # chunks on the scan axis: [n_chunks, B, L, H, *]
+    rf, kf, vf, logw = (x.swapaxes(0, 1) for x in (rf, kf, vf, logw))
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32), k=-1)  # strict lower
+
+    def sub_block(S_state, rc, kc, vc, lw):
+        """One q-length sub-block: exact factorised pairwise decays."""
+        out_dtype = rc.dtype
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        lw = jnp.log(jnp.clip(lw.astype(jnp.float32), 1e-30, 1.0))
+        Lc = jnp.cumsum(lw, axis=1)              # inclusive prefix [B,q,H,D]
+        Lprev = Lc - lw                          # exclusive prefix
+        rd = rc * jnp.exp(Lprev)                 # <= rc (decays)
+        ki = kc * jnp.exp(-Lc)                   # bounded: q*|log w| <= ~88
+        sc = jnp.einsum("bthd,bihd->bhti", rd, ki) * tri[None, None]
+        diag = jnp.einsum("bthd,bthd->bth", rc, uf[None, None] * kc)
+        out = jnp.einsum("bhti,bihd->bthd", sc, vc)
+        out = out + diag[..., None] * vc
+        out = out + jnp.einsum("bthk,bhkv->bthv", rd, S_state)
+        decay_all = jnp.exp(Lc[:, -1])           # [B,H,Dk]
+        kd = kc * jnp.exp(Lc[:, -1][:, None] - Lc)
+        S_new = (decay_all[..., None] * S_state
+                 + jnp.einsum("bthk,bthv->bhkv", kd, vc))
+        # emit storage dtype per tile: halves the stacked chunk outputs
+        # and their gradients (EXPERIMENTS §Perf rwkv iter 3)
+        return S_new, out.astype(out_dtype)
+
+    def per_chunk(S_state, xs):
+        rc, kc, vc, lw = xs                      # [B, L, H, *]
+        outs = []
+        for j in range(n_sub):                   # unrolled: in-fusion state
+            sl = slice(j * q, (j + 1) * q)
+            S_state, o = sub_block(S_state, rc[:, sl], kc[:, sl],
+                                   vc[:, sl], lw[:, sl])
+            outs.append(o)
+        return S_state, jnp.concatenate(outs, axis=1)
+
+    s_last, outs = jax.lax.scan(per_chunk, s0.astype(jnp.float32),
+                                (rf, kf, vf, logw))
+    out = outs.swapaxes(0, 1).reshape(B, S, H, Dv)
+    return out.astype(r.dtype), s_last

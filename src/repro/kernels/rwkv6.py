@@ -1,0 +1,90 @@
+"""RWKV6 (Finch) WKV recurrence as a Pallas TPU kernel.
+
+Per head, with state S ∈ R^{Dk×Dv}:
+
+    out_t = r_t (S + u ⊙ k_t^T v_t)
+    S    <- diag(w_t) S + k_t^T v_t        (data-dependent decay w_t)
+
+TPU adaptation: grid tiles (batch, heads); each program owns the full
+[S, Dk]/[S, Dv] stripes of one head in VMEM and carries the Dk×Dv state
+matrix in VMEM scratch across a fori_loop over time.  Head dims are 64
+(rwkv6-7b), so the state tile (64×64 fp32 = 16 KB) sits comfortably in
+VMEM and each step is a rank-1 update + matvec on the VPU.  A production
+variant chunks time and uses the MXU for the intra-chunk parallel form;
+the sequential form is the validated reference target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_scan"]
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                  o_ref, slast_ref, s_scr, *, seq_len: int):
+    s_scr[...] = s0_ref[0, 0].astype(jnp.float32)     # [Dk, Dv]
+    u = u_ref[0].astype(jnp.float32)                  # [1?, Dk] -> [Dk]
+
+    def body(t, _):
+        r_t = r_ref[0, 0, t, :].astype(jnp.float32)   # [Dk]
+        k_t = k_ref[0, 0, t, :].astype(jnp.float32)   # [Dk]
+        v_t = v_ref[0, 0, t, :].astype(jnp.float32)   # [Dv]
+        w_t = w_ref[0, 0, t, :].astype(jnp.float32)   # [Dk]
+        kv = k_t[:, None] * v_t[None, :]              # [Dk, Dv]
+        s = s_scr[...]
+        out = jnp.sum((s + u[0][:, None] * kv) * r_t[:, None], axis=0)
+        s_scr[...] = w_t[:, None] * s + kv
+        o_ref[0, 0, t, :] = out.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, body, 0)
+    slast_ref[0, 0] = s_scr[...]
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, s0: jax.Array | None = None,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """r/k/w [B, S, H, Dk], v [B, S, H, Dv], u [H, Dk].
+
+    Returns (out [B, S, H, Dv], S_last [B, H, Dk, Dv]).
+    """
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    # [B, H, S, D] stripes per (batch, head) program
+    rt = r.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    wt = w.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_rwkv6_kernel, seq_len=S)
+    out, s_last = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dv), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dk), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Dk), lambda b, h: (0, h, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, S, Dv), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, Dv), r.dtype),
+            jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u.reshape(1, H, Dk), s0)
+    return out.transpose(0, 2, 1, 3), s_last

@@ -1,0 +1,4 @@
+# NOTE: dryrun is intentionally NOT imported here — it sets XLA_FLAGS at
+# import time and must only be imported as the program entry point.
+from .steps import make_prefill_step, make_serve_step, make_train_step
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step"]

@@ -1,0 +1,205 @@
+"""(architecture × input-shape) cells: input specs, state specs, parallel
+plans, and the lowering entry used by the dry-run and the benchmarks.
+
+Everything here is ShapeDtypeStruct-based — no device allocation — per
+the assignment: full configs are exercised only via lower()/compile().
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel.sharding import (batch_specs, cache_specs,
+                                     param_specs, sanitize_specs)
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["Cell", "enumerate_cells", "cell_skip_reason", "lower_cell",
+           "parallel_plan"]
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return ARCHS[self.arch]
+
+    @property
+    def shape_cfg(self) -> ShapeConfig:
+        return SHAPES[self.shape]
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+def cell_skip_reason(cell: Cell) -> str | None:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    cfg, sc = cell.cfg, cell.shape_cfg
+    if sc.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: O(S^2) attention at 524k context — "
+                "skipped per assignment (DESIGN.md §6)")
+    return None
+
+
+def enumerate_cells(include_skipped: bool = False) -> list[Cell]:
+    cells = [Cell(a, s) for a in ARCHS for s in SHAPES]
+    if include_skipped:
+        return cells
+    return [c for c in cells if cell_skip_reason(c) is None]
+
+
+# ---------------------------------------------------------------------- #
+# per-cell parallel plan (baseline; §Perf iterates on these)
+# ---------------------------------------------------------------------- #
+TOKENS_PER_SHARD_TARGET = 8_192   # activation working-set control
+
+
+def parallel_plan(cell: Cell, override: dict | None = None,
+                  data_shards: int = 16) -> tuple[ParallelConfig,
+                                                  AdamWConfig]:
+    cfg, sc = cell.cfg, cell.shape_cfg
+    kw: dict[str, Any] = dict(fsdp=True, tp=True, ep=cfg.is_moe)
+    opt_kw: dict[str, Any] = {}
+    if sc.kind == "train":
+        # microbatch so tokens/device stays bounded; remat the stage scan
+        tokens_per_shard = sc.global_batch * sc.seq_len // data_shards
+        micro = max(1, min(sc.global_batch // data_shards,
+                           tokens_per_shard // TOKENS_PER_SHARD_TARGET))
+        kw.update(microbatches=int(micro), remat="block")
+        if cfg.param_count() > 100e9:
+            opt_kw.update(moment_dtype=jnp.bfloat16)
+    if override:
+        kw.update(override)
+    return ParallelConfig(**kw), AdamWConfig(**opt_kw)
+
+
+# ---------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins, shard-ready)
+# ---------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, B: int, S: int,
+                 n_micro: int = 1) -> dict:
+    """Token batch + modality-frontend stubs (precomputed embeddings).
+    With n_micro > 1 the GLOBAL batch B is split: leaves are
+    [n_micro, B/n_micro, ...]."""
+    lead = (n_micro,) if n_micro > 1 else ()
+    if n_micro > 1:
+        assert B % n_micro == 0, (B, n_micro)
+        B = B // n_micro
+    batch = {"tokens": _sds(lead + (B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        n_patch = max(min(256, S // 4), 4)
+        batch["patch_embeds"] = _sds(lead + (B, n_patch, cfg.d_model),
+                                     PARAM_DTYPE)
+        batch["mrope_pos"] = _sds(lead + (3, B, S), jnp.int32)
+    if cfg.n_encoder_layers:
+        batch["frame_embeds"] = _sds(lead + (B, S, cfg.d_model),
+                                     PARAM_DTYPE)
+    return batch
+
+
+def input_specs(cell: Cell) -> dict:
+    """All abstract inputs for the cell's step function."""
+    cfg, sc = cell.cfg, cell.shape_cfg
+    par, opt_cfg = parallel_plan(cell)
+    params = jax.eval_shape(
+        functools.partial(models.init_params, cfg, dtype=PARAM_DTYPE),
+        jax.random.PRNGKey(0))
+    out = {"params": params, "cfg": cfg, "par": par, "opt_cfg": opt_cfg}
+    if sc.kind == "train":
+        out["opt_state"] = jax.eval_shape(
+            functools.partial(adamw_init, cfg=opt_cfg), params)
+        out["batch"] = batch_struct(cfg, sc.global_batch, sc.seq_len,
+                                    n_micro=par.microbatches)
+    elif sc.kind == "prefill":
+        out["batch"] = batch_struct(cfg, sc.global_batch, sc.seq_len)
+    else:  # decode
+        out["cache"] = jax.eval_shape(
+            functools.partial(models.init_cache, cfg, sc.global_batch,
+                              sc.seq_len, dtype=PARAM_DTYPE))
+        out["tokens"] = _sds((sc.global_batch,), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# lowering
+# ---------------------------------------------------------------------- #
+def _shard(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cell: Cell, mesh, impl: str = "auto",
+               par_override: dict | None = None):
+    """jit(...).lower(...) for the cell's step on `mesh`.
+
+    Returns (lowered, meta) where meta records the step kind and plan."""
+    cfg, sc = cell.cfg, cell.shape_cfg
+    par, opt_cfg = parallel_plan(cell, par_override)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    spec = input_specs(cell)
+    params = spec["params"]
+    p_specs = sanitize_specs(param_specs(params, cfg, par), params, mesh)
+    p_sh = _shard(mesh, p_specs)
+
+    if sc.kind == "train":
+        step = make_train_step(cfg, opt_cfg, par, impl=impl)
+        opt_state = spec["opt_state"]
+        o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+        o_sh = _shard(mesh, o_specs)
+        b_specs = sanitize_specs(
+            batch_specs(cfg, spec["batch"], data_axes,
+                        micro_split=par.microbatches > 1),
+            spec["batch"], mesh)
+        b_sh = _shard(mesh, b_specs)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        ).lower(params, opt_state, spec["batch"])
+    elif sc.kind == "prefill":
+        step = make_prefill_step(cfg, impl=impl)
+        b_specs = sanitize_specs(batch_specs(cfg, spec["batch"],
+                                             data_axes),
+                                 spec["batch"], mesh)
+        b_sh = _shard(mesh, b_specs)
+        lowered = jax.jit(
+            step, in_shardings=(p_sh, b_sh),
+        ).lower(params, spec["batch"])
+    else:
+        step = make_serve_step(cfg)
+        c_specs = sanitize_specs(
+            cache_specs(spec["cache"], data_axes), spec["cache"], mesh)
+        c_sh = _shard(mesh, c_specs)
+        t_specs = sanitize_specs(P(data_axes), spec["tokens"], mesh)
+        t_sh = NamedSharding(mesh, t_specs)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, t_sh, NamedSharding(mesh, P())),
+            out_shardings=(t_sh, c_sh),
+            donate_argnums=(1,),
+        ).lower(params, spec["cache"], spec["tokens"], spec["pos"])
+    meta = {"cell": cell.name, "kind": sc.kind,
+            "parallel": dataclasses.asdict(par),
+            "params_b": cell.cfg.param_count()}
+    return lowered, meta

@@ -1,0 +1,91 @@
+"""Step functions: train_step (grad accumulation + remat options) and
+serve_step (greedy decode) — the functions every launcher and the
+multi-pod dry-run lower."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    par: ParallelConfig, impl: str = "auto",
+                    accum_dtype=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt,
+    metrics).  Gradient accumulation over `par.microbatches` splits the
+    *local* batch; remat wraps the per-microbatch loss.
+
+    `accum_dtype` controls the gradient accumulator/reduction dtype:
+    bf16 for memory-class cells (halves both the accumulator residency
+    and the cross-shard gradient all-reduce bytes — §Perf deepseek
+    iteration); default follows opt_cfg.moment_dtype."""
+    if accum_dtype is None:
+        accum_dtype = opt_cfg.moment_dtype
+
+    loss = functools.partial(models.loss_fn, cfg, impl=impl,
+                             remat=(par.remat != "none"))
+
+    def single_loss(params, batch):
+        return loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        """With par.microbatches > 1 the loader supplies `batch` already
+        split: leaves have a leading [n_micro] dim (keeps the sharded
+        batch dim intact — no resharding reshape)."""
+        n_micro = par.microbatches
+        if n_micro > 1:
+            micro = batch
+
+            def accum(acc, mb):
+                l, g = jax.value_and_grad(single_loss)(params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree.map(
+                            lambda a, b: (a + b.astype(accum_dtype)),
+                            acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (tot_l, tot_g), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zero_g), micro)
+            loss_val = tot_l / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, tot_g)
+        else:
+            loss_val, grads = jax.value_and_grad(single_loss)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(accum_dtype), grads)
+        new_params, new_opt, metrics = adamw_update(params, grads,
+                                                    opt_state, opt_cfg)
+        metrics["loss"] = loss_val
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens [B], pos) -> (next_tokens, cache).
+    One decode step with a KV/state cache — what the decode_* dry-run
+    cells lower."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = models.decode_step(cfg, params, cache, tokens, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: str = "auto"):
+    """prefill_step(params, batch) -> logits — the prompt forward pass
+    (what the prefill_* dry-run cells lower)."""
+
+    def prefill_step(params, batch):
+        logits, _ = models.forward(cfg, params, batch, impl=impl)
+        return logits[:, -1]
+
+    return prefill_step

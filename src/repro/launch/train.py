@@ -1,0 +1,118 @@
+"""Training launcher.
+
+CPU-runnable end-to-end driver (reduced configs) and the production
+entry (full configs lower through the same path the dry-run exercises):
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \\
+        --reduced --steps 100 --batch 8 --seq 128
+
+Features wired in: deterministic sharded data pipeline, AdamW + cosine
+schedule + clipping, gradient accumulation, checkpoint/restart (resume
+from the latest step automatically), straggler detection, and the
+supervisor loop that restores from the last checkpoint on a step failure.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.configs.base import ParallelConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import StragglerDetector
+from .steps import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (e.g. ~100M runs)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        over = {}
+        if args.d_model:
+            over.update(d_model=args.d_model,
+                        head_dim=max(args.d_model // 8, 16),
+                        n_heads=8,
+                        n_kv_heads=4 if cfg.n_kv_heads > 1 else 1,
+                        d_ff=args.d_model * 4)
+        if args.n_layers:
+            over.update(n_layers=args.n_layers)
+        cfg = reduced_config(cfg, vocab_size=4096, **over)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    par = ParallelConfig(fsdp=False, tp=False,
+                         microbatches=args.microbatches,
+                         remat="none")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch,
+                                  seed=args.seed))
+
+    params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, par))
+
+    ckpt = None
+    start = 0
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        latest = ckpt.latest_step()
+        if latest is not None:
+            (params, opt_state), meta = ckpt.restore((params, opt_state))
+            start = meta["step"]
+            print(f"resumed from step {start}")
+
+    straggler = StragglerDetector()
+    losses = []
+    for step in range(start, args.steps):
+        batch = jax.tree.map(
+            jnp.asarray, data.batch(step, n_micro=args.microbatches))
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        dt = time.time() - t0
+        flagged = straggler.observe(step, dt)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                  + (" [straggler]" if flagged else ""))
+        if ckpt and (step + 1) % args.save_every == 0:
+            ckpt.save(step + 1, (params, opt_state), blocking=False)
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    first = np.mean(losses[:5]) if len(losses) >= 5 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

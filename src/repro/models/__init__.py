@@ -1,0 +1,6 @@
+"""Model zoo: every assigned architecture through one functional API."""
+from .model import (decode_step, forward, init_cache, init_params, loss_fn,
+                    prefill)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache",
+           "decode_step", "prefill"]

@@ -1,0 +1,272 @@
+"""Attention blocks: GQA/MQA (with local windows, softcap, RoPE/M-RoPE),
+Multi-head Latent Attention (DeepSeek-V3), and cross-attention.
+
+Each block provides:
+  init(key, cfg, ...)                                -> params
+  apply(params, cfg, x, positions, ...)              -> y          (full seq)
+  init_cache(cfg, batch, max_len, ...)               -> cache      (decode)
+  apply_decode(params, cfg, x, cache, pos, ...)      -> y, cache   (one token)
+
+Caches for windowed layers are ring buffers of size min(window, max_len);
+MLA caches store the *compressed* latent (kv_lora + rope dims per token),
+which is what makes 32k-context decode of a 128-head model feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import init_dense, dense, init_rms_norm, rms_norm, rope, mrope
+
+__all__ = ["GQA", "MLA", "CrossAttention"]
+
+
+def _apply_rope(cfg: ModelConfig, x, positions):
+    if cfg.mrope_sections is not None:
+        return mrope(x, positions, tuple(cfg.mrope_sections),
+                     cfg.rope_theta)
+    return rope(x, positions, cfg.rope_theta)
+
+
+class GQA:
+    """Grouped-query attention (covers MHA and MQA)."""
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        d, hd = cfg.d_model, cfg.head_dim
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        return {
+            "wq": init_dense(kq, d, cfg.n_heads * hd, dtype),
+            "wk": init_dense(kk, d, cfg.n_kv_heads * hd, dtype),
+            "wv": init_dense(kv, d, cfg.n_kv_heads * hd, dtype),
+            "wo": init_dense(ko, cfg.n_heads * hd, d, dtype),
+        }
+
+    @staticmethod
+    def _qkv(p, cfg, x, positions):
+        B, S, _ = x.shape
+        hd = cfg.head_dim
+        q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+        v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+        q = _apply_rope(cfg, q, positions)
+        k = _apply_rope(cfg, k, positions)
+        return q, k, v
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, window: int | None = None,
+              impl: str = "auto") -> jax.Array:
+        B, S, _ = x.shape
+        q, k, v = GQA._qkv(p, cfg, x, positions)
+        o = ops.attention(q, k, v, causal=True, window=window,
+                          softcap=cfg.attn_softcap, impl=impl)
+        return dense(p["wo"], o.reshape(B, S, -1))
+
+    @staticmethod
+    def apply_bidirectional(p: dict, cfg: ModelConfig, x: jax.Array,
+                            positions: jax.Array,
+                            impl: str = "auto") -> jax.Array:
+        """Encoder self-attention: no causal mask."""
+        B, S, _ = x.shape
+        q, k, v = GQA._qkv(p, cfg, x, positions)
+        o = ops.attention(q, k, v, causal=False,
+                          softcap=cfg.attn_softcap, impl=impl)
+        return dense(p["wo"], o.reshape(B, S, -1))
+
+    # -- decode ---------------------------------------------------------- #
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window: int | None = None, dtype=jnp.float32) -> dict:
+        W = min(window, max_len) if window else max_len
+        hd = cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, W, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, W, cfg.n_kv_heads, hd), dtype),
+        }
+
+    @staticmethod
+    def apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, window: int | None = None
+                     ) -> tuple[jax.Array, dict]:
+        """x [B, 1, d]; pos: scalar int32 absolute position."""
+        B = x.shape[0]
+        hd = cfg.head_dim
+        if cfg.mrope_sections is not None:
+            positions = jnp.full((3, B, 1), pos, jnp.int32)  # text mode
+        else:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k, v = GQA._qkv(p, cfg, x, positions)
+        W = cache["k"].shape[1]
+        slot = pos % W  # ring buffer for windowed layers; == pos otherwise
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        # positions of ring slots: slot i holds absolute pos p where
+        # p % W == i and p <= pos and p > pos - W
+        idx = jnp.arange(W)
+        abs_pos = pos - ((pos - idx) % W)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if window is not None:
+            valid &= abs_pos > pos - window
+        logits_mask = jnp.where(valid, 0.0, -1e30)
+        # grouped-query einsum: no materialised head-repeat of the cache,
+        # bf16 operands with f32 accumulation (decode is HBM-bound — the
+        # cache read IS the cost; see EXPERIMENTS §Perf)
+        Hkv = cfg.n_kv_heads
+        G = cfg.n_heads // Hkv
+        qg = (q * (hd ** -0.5)).reshape(B, 1, Hkv, G, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap is not None:
+            s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+        s = s + logits_mask[None, None, None, None, :]
+        probs = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd",
+                       probs.astype(ck.dtype), cv,
+                       preferred_element_type=jnp.float32)
+        y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+        return y, {"k": ck, "v": cv}
+
+
+class MLA:
+    """Multi-head Latent Attention (DeepSeek-V3).
+
+    Prefill/train materialise per-head k/v from the compressed latent;
+    decode uses the *absorbed* form: scores and values are computed in the
+    kv_lora latent space so the cache holds only (kv_lora + rope_dim)
+    floats per token."""
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        d = cfg.d_model
+        H = cfg.n_heads
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        keys = jax.random.split(key, 8)
+        p = {}
+        if cfg.q_lora_rank:
+            p["wq_a"] = init_dense(keys[0], d, cfg.q_lora_rank, dtype)
+            p["q_norm"] = init_rms_norm(cfg.q_lora_rank, dtype)
+            p["wq_b"] = init_dense(keys[1], cfg.q_lora_rank,
+                                   H * (dn + dr), dtype)
+        else:
+            p["wq"] = init_dense(keys[1], d, H * (dn + dr), dtype)
+        p["wkv_a"] = init_dense(keys[2], d, cfg.kv_lora_rank + dr, dtype)
+        p["kv_norm"] = init_rms_norm(cfg.kv_lora_rank, dtype)
+        p["wk_b"] = init_dense(keys[3], cfg.kv_lora_rank, H * dn, dtype)
+        p["wv_b"] = init_dense(keys[4], cfg.kv_lora_rank, H * dv, dtype)
+        p["wo"] = init_dense(keys[5], H * dv, d, dtype)
+        return p
+
+    @staticmethod
+    def _q(p, cfg, x, positions):
+        B, S, _ = x.shape
+        H = cfg.n_heads
+        dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        if cfg.q_lora_rank:
+            q = dense(p["wq_b"], rms_norm(p["q_norm"], dense(p["wq_a"], x)))
+        else:
+            q = dense(p["wq"], x)
+        q = q.reshape(B, S, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        return q_nope, q_rope
+
+    @staticmethod
+    def _latent(p, cfg, x, positions):
+        B, S, _ = x.shape
+        dr = cfg.qk_rope_head_dim
+        kv = dense(p["wkv_a"], x)
+        c_kv = rms_norm(p["kv_norm"], kv[..., :cfg.kv_lora_rank])
+        k_rope = rope(kv[..., cfg.kv_lora_rank:].reshape(B, S, 1, dr),
+                      positions, cfg.rope_theta)
+        return c_kv, k_rope
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, window: int | None = None,
+              impl: str = "auto") -> jax.Array:
+        B, S, _ = x.shape
+        H = cfg.n_heads
+        dn, dr, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim)
+        q_nope, q_rope = MLA._q(p, cfg, x, positions)
+        c_kv, k_rope = MLA._latent(p, cfg, x, positions)
+        k_nope = dense(p["wk_b"], c_kv).reshape(B, S, H, dn)
+        v = dense(p["wv_b"], c_kv).reshape(B, S, H, dv)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope, (B, S, H, dr))], -1)
+        o = ops.attention(q, k, v, causal=True, window=window,
+                          scale=(dn + dr) ** -0.5, impl=impl)
+        return dense(p["wo"], o.reshape(B, S, -1))
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   window: int | None = None, dtype=jnp.float32) -> dict:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                               dtype),
+        }
+
+    @staticmethod
+    def apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, window: int | None = None
+                     ) -> tuple[jax.Array, dict]:
+        B = x.shape[0]
+        H = cfg.n_heads
+        dn, dr, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim)
+        L = cfg.kv_lora_rank
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q_nope, q_rope = MLA._q(p, cfg, x, positions)      # [B,1,H,*]
+        c_kv, k_rope = MLA._latent(p, cfg, x, positions)   # [B,1,L],[B,1,1,dr]
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope[:, :, 0].astype(cache["krope"].dtype),
+            (0, pos, 0))
+        # absorbed scores: q_nope projected into latent space
+        wk = p["wk_b"]["w"].reshape(L, H, dn)
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                           wk.astype(jnp.float32))          # [B,1,H,L]
+        s_nope = jnp.einsum("bqhl,bkl->bhqk", q_lat,
+                            ckv.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhd,bkd->bhqk",
+                            q_rope.astype(jnp.float32),
+                            krope.astype(jnp.float32))
+        s = (s_nope + s_rope) * ((dn + dr) ** -0.5)
+        S_max = ckv.shape[1]
+        valid = jnp.arange(S_max) <= pos
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkl->bqhl", probs,
+                           ckv.astype(jnp.float32))          # [B,1,H,L]
+        wv = p["wv_b"]["w"].reshape(L, H, dv)
+        o = jnp.einsum("bqhl,lhd->bqhd", o_lat, wv.astype(jnp.float32))
+        y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+        return y, {"ckv": ckv, "krope": krope}
+
+
+class CrossAttention:
+    """Encoder-decoder cross attention (seamless)."""
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        return GQA.init(key, cfg, dtype)
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              enc: jax.Array, impl: str = "auto") -> jax.Array:
+        B, S, _ = x.shape
+        Se = enc.shape[1]
+        hd = cfg.head_dim
+        q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        k = dense(p["wk"], enc).reshape(B, Se, cfg.n_kv_heads, hd)
+        v = dense(p["wv"], enc).reshape(B, Se, cfg.n_kv_heads, hd)
+        o = ops.attention(q, k, v, causal=False, impl=impl)
+        return dense(p["wo"], o.reshape(B, S, -1))

@@ -1,0 +1,141 @@
+"""Shared model primitives: norms, rotary embeddings, MLPs, embeddings.
+
+Functional style: params are nested dicts of jnp arrays; every init_*
+function is pure (usable under `jax.eval_shape` for the dry-run) and
+every apply function is jit/pjit-compatible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["rms_norm", "init_rms_norm", "rope", "mrope", "init_dense",
+           "dense", "init_mlp", "mlp", "init_embedding", "embed",
+           "unembed", "act_fn"]
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# rotary embeddings
+# ---------------------------------------------------------------------- #
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions [...], returns (sin, cos) of shape [..., dim//2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 10_000.0) -> jax.Array:
+    """x [B, S, H, D], positions [B, S] (absolute)."""
+    D = x.shape[-1]
+    sin, cos = _rope_angles(positions, D, theta)     # [B, S, D/2]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions: jax.Array, sections: tuple,
+          theta: float = 1_000_000.0) -> jax.Array:
+    """Qwen2-VL multimodal rotary: positions [3, B, S] (t/h/w streams),
+    `sections` gives the per-stream split of the half-dim frequency bands
+    (e.g. (16, 24, 24) for head_dim 128)."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    sins, coss = [], []
+    for i, sec in enumerate(sections):
+        lo = sum(sections[:i])
+        freqs = 1.0 / (theta ** (jnp.arange(0, D, 2,
+                                            dtype=jnp.float32) / D))
+        f = freqs[lo:lo + sec]
+        ang = positions[i].astype(jnp.float32)[..., None] * f  # [B,S,sec]
+        sins.append(jnp.sin(ang))
+        coss.append(jnp.cos(ang))
+    sin = jnp.concatenate(sins, -1)[:, :, None, :]
+    cos = jnp.concatenate(coss, -1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# dense / MLP
+# ---------------------------------------------------------------------- #
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32) -> dict:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"].astype(x.dtype)
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": init_dense(k1, d, d_ff, dtype),
+        "w_gate": init_dense(k2, d, d_ff, dtype),
+        "w_out": init_dense(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU by `act`)."""
+    return dense(p["w_out"], act_fn(act, dense(p["w_gate"], x))
+                 * dense(p["w_in"], x))
+
+
+# ---------------------------------------------------------------------- #
+# embeddings
+# ---------------------------------------------------------------------- #
+def init_embedding(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"table": jax.random.normal(
+        k1, (cfg.vocab_size, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(
+            k2, (cfg.d_model, cfg.vocab_size), dtype) * 0.02
+    return p
+
+
+def embed(p: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    h = jnp.take(p["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def unembed(p: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = h @ p["table"].astype(h.dtype).T
+    else:
+        logits = h @ p["unembed"].astype(h.dtype)
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits

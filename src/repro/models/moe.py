@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer with capacity-based scatter dispatch (EP).
+
+Routing: softmax top-k (DeepSeek-V3's sigmoid+bias variant is simplified
+to softmax — recorded in DESIGN.md).  Dispatch is scatter/gather based
+rather than GShard one-hot-einsum: per token group (the leading batch
+dim, sharded over 'data'), tokens are scattered into [E, C, d] expert
+buffers.  Under GSPMD the buffers are resharded from data-sharded groups
+to expert-sharded compute — exactly the EP all-to-all — without ever
+materialising a [tokens, E, C] one-hot.
+
+Expert weights are stacked [E, ...] so the E axis shards over 'model'
+(expert parallelism).  `vertex_cut` expert placement (core.planner)
+permutes the expert axis so co-activated experts land on the same shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import maybe_shard
+from .layers import act_fn, init_dense, init_mlp, mlp
+
+__all__ = ["MoE"]
+
+
+class MoE:
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        d = cfg.d_model
+        ff = cfg.moe_d_ff or cfg.d_ff
+        E = cfg.n_experts
+        kr, ki, kg, ko, ks = jax.random.split(key, 5)
+        scale = (2.0 / (d + ff)) ** 0.5
+        p = {
+            "router": init_dense(kr, d, E, dtype),
+            "w_in": jax.random.normal(ki, (E, d, ff), dtype) * scale,
+            "w_gate": jax.random.normal(kg, (E, d, ff), dtype) * scale,
+            "w_out": jax.random.normal(ko, (E, ff, d), dtype) * scale,
+        }
+        if cfg.n_shared_experts:
+            p["shared"] = init_mlp(ks, d, ff * cfg.n_shared_experts, dtype)
+        return p
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: float | None = None) -> jax.Array:
+        """x [G, S, d] (G = token groups, sharded over data axis)."""
+        G, S, d = x.shape
+        E, k = cfg.n_experts, cfg.experts_per_token
+        cf = capacity_factor or cfg.capacity_factor
+        C = max(int(S * k * cf / E), 4)
+
+        logits = jnp.einsum("gsd,de->gse", x, p["router"]["w"].astype(x.dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)           # [G, S, k]
+        top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+        # position of each (token, slot) within its expert, per group
+        onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)   # [G,S,k,E]
+        pos_in_e = (jnp.cumsum(onehot.reshape(G, S * k, E), axis=1)
+                    .reshape(G, S, k, E) - 1)
+        pos = jnp.take_along_axis(
+            pos_in_e, top_e[..., None], axis=-1)[..., 0]      # [G,S,k]
+        keep = pos < C
+
+        def dispatch_group(xg, eg, posg, keepg):
+            # xg [S,d], eg/posg/keepg [S,k]
+            buf = jnp.zeros((E, C, d), xg.dtype)
+            tok = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k))
+            e_flat = jnp.where(keepg, eg, E - 1).reshape(-1)
+            p_flat = jnp.where(keepg, posg, C - 1).reshape(-1)
+            x_flat = (xg[tok.reshape(-1)]
+                      * keepg.reshape(-1)[:, None].astype(xg.dtype))
+            return buf.at[e_flat, p_flat].add(x_flat)
+
+        buffers = jax.vmap(dispatch_group)(x, top_e, pos, keep)  # [G,E,C,d]
+        # dispatch buffers are data-sharded on G; the expert einsums want
+        # E sharded over 'model' — this constraint is the EP all-to-all
+        buffers = maybe_shard(buffers, "data", "model", None, None)
+
+        # expert compute (E sharded over 'model' => all-to-all here)
+        h_in = jnp.einsum("gecd,edf->gecf", buffers,
+                          p["w_in"].astype(x.dtype))
+        h_gate = jnp.einsum("gecd,edf->gecf", buffers,
+                            p["w_gate"].astype(x.dtype))
+        h = act_fn(cfg.hidden_act, h_gate) * h_in
+        out_buf = jnp.einsum("gecf,efd->gecd", h,
+                             p["w_out"].astype(x.dtype))       # [G,E,C,d]
+
+        def combine_group(bufg, eg, posg, keepg, wg):
+            vals = bufg[eg.reshape(-1), posg.reshape(-1)].reshape(
+                eg.shape + (d,))                                # [S,k,d]
+            w = (wg * keepg).astype(vals.dtype)[..., None]
+            return (vals * w).sum(axis=1)                       # [S,d]
+
+        # reshard expert outputs back to token owners (return all-to-all)
+        out_buf = maybe_shard(out_buf, "data", None, None, None)
+        y = jax.vmap(combine_group)(out_buf, top_e, pos, keep, top_p)
+        y = maybe_shard(y, "data", None, None)
+        if "shared" in p:
+            y = y + mlp(p["shared"], x, cfg.hidden_act)
+        return y
+
+    @staticmethod
+    def aux_loss(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+        """Load-balancing auxiliary loss (Switch-style)."""
+        logits = jnp.einsum("gsd,de->gse", x,
+                            p["router"]["w"].astype(x.dtype))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        _, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+        frac = jax.nn.one_hot(top_e, cfg.n_experts).mean((0, 1, 2))
+        imp = probs.mean((0, 1))
+        return cfg.n_experts * jnp.sum(frac * imp)

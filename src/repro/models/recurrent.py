@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Structure (per Griffin):  x -> [branch1: dense+gelu] ⊙ [branch2: conv1d(4)
+-> RG-LRU] -> dense out.  The RG-LRU gate:
+
+    r_t = σ(x W_r + b_r)          (recurrence gate)
+    i_t = σ(x W_i + b_i)          (input gate)
+    a_t = a^(c·r_t),  a = σ(Λ)    (per-channel learned decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1-a_t²)·(i_t ⊙ x_t)
+
+The scan itself runs in the Pallas kernel (kernels.ops.rglru).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import init_dense, dense
+
+__all__ = ["RGLRUBlock"]
+
+_C = 8.0
+
+
+class RGLRUBlock:
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        d = cfg.d_model
+        rw = cfg.rglru_width or d
+        W = cfg.conv1d_width
+        keys = jax.random.split(key, 6)
+        return {
+            "wx": init_dense(keys[0], d, rw, dtype),      # recurrent branch
+            "wy": init_dense(keys[1], d, rw, dtype),      # gate branch
+            "conv_w": jax.random.normal(keys[2], (W, rw), dtype) * 0.02,
+            "conv_b": jnp.zeros((rw,), dtype),
+            "wr": init_dense(keys[3], rw, rw, dtype),
+            "wi": init_dense(keys[4], rw, rw, dtype),
+            "lam": jnp.full((rw,), 3.0, dtype),           # σ(3)≈0.95 decay
+            "wo": init_dense(keys[5], rw, d, dtype),
+        }
+
+    # -- helpers --------------------------------------------------------- #
+    @staticmethod
+    def _conv(p, x, state=None):
+        """Causal depthwise conv1d, width W.  x [B,S,rw].
+        `state` [B, W-1, rw] carries the left context for decode."""
+        W = p["conv_w"].shape[0]
+        if state is None:
+            pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+        else:
+            pad = state.astype(x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)            # [B,S+W-1,rw]
+        out = sum(xp[:, i:i + x.shape[1], :]
+                  * p["conv_w"][i].astype(x.dtype)
+                  for i in range(W))
+        return out + p["conv_b"].astype(x.dtype), xp[:, -(W - 1):, :]
+
+    @staticmethod
+    def _gates(p, u):
+        r = jax.nn.sigmoid(dense(p["wr"], u).astype(jnp.float32))
+        i = jax.nn.sigmoid(dense(p["wi"], u).astype(jnp.float32))
+        log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+        a = jnp.exp(log_a)
+        gated = (i * u.astype(jnp.float32)).astype(u.dtype)
+        return a.astype(u.dtype), gated
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              impl: str = "auto") -> jax.Array:
+        gate = jax.nn.gelu(dense(p["wy"], x), approximate=True)
+        u = dense(p["wx"], x)
+        u, _ = RGLRUBlock._conv(p, u)
+        a, gated = RGLRUBlock._gates(p, u)
+        h, _ = ops.rglru(gated, a, impl=impl)
+        return dense(p["wo"], h * gate)
+
+    # -- decode ---------------------------------------------------------- #
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+        rw = cfg.rglru_width or cfg.d_model
+        return {
+            "h": jnp.zeros((batch, rw), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, rw), dtype),
+        }
+
+    @staticmethod
+    def apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array) -> tuple[jax.Array, dict]:
+        gate = jax.nn.gelu(dense(p["wy"], x), approximate=True)
+        u = dense(p["wx"], x)                              # [B,1,rw]
+        u, conv_state = RGLRUBlock._conv(p, u, cache["conv"])
+        a, gated = RGLRUBlock._gates(p, u)
+        af = a.astype(jnp.float32)[:, 0]
+        bf = (jnp.sqrt(jnp.clip(1 - af * af, 0, 1))
+              * gated.astype(jnp.float32)[:, 0])
+        h = af * cache["h"] + bf                           # [B,rw]
+        y = dense(p["wo"], (h[:, None].astype(x.dtype) * gate))
+        return y, {"h": h, "conv": conv_state}

@@ -1,0 +1,138 @@
+"""RWKV6 (Finch) block: time-mix (WKV recurrence with data-dependent
+decay) + channel-mix, both with token-shift.
+
+Time-mix per head (the scan runs in kernels.ops.rwkv6):
+
+    out_t = r_t (S + u ⊙ k_t^T v_t),   S <- diag(w_t) S + k_t^T v_t
+
+with w_t = exp(-exp(wd_t)) computed from a LoRA on the shifted input —
+the data-dependent decay that distinguishes Finch from RWKV5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from .layers import init_dense, dense, init_rms_norm, rms_norm
+
+__all__ = ["RWKV6Block"]
+
+_LORA = 64
+
+
+class RWKV6Block:
+
+    @staticmethod
+    def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+        d = cfg.d_model
+        keys = jax.random.split(key, 12)
+        p = {
+            # time-mix
+            "mix_r": jnp.full((d,), 0.5, dtype),
+            "mix_k": jnp.full((d,), 0.5, dtype),
+            "mix_v": jnp.full((d,), 0.5, dtype),
+            "mix_w": jnp.full((d,), 0.5, dtype),
+            "mix_g": jnp.full((d,), 0.5, dtype),
+            "wr": init_dense(keys[0], d, d, dtype),
+            "wk": init_dense(keys[1], d, d, dtype),
+            "wv": init_dense(keys[2], d, d, dtype),
+            "wg": init_dense(keys[3], d, d, dtype),
+            "w_lora_a": init_dense(keys[4], d, _LORA, dtype),
+            "w_lora_b": init_dense(keys[5], _LORA, d, dtype),
+            "w_base": jnp.full((d,), -6.0, dtype),
+            "u": jax.random.normal(keys[6], (d,), dtype) * 0.1,
+            "wo": init_dense(keys[7], d, d, dtype),
+            "ln_x": init_rms_norm(d, dtype),
+            # channel-mix
+            "cmix_k": jnp.full((d,), 0.5, dtype),
+            "cmix_r": jnp.full((d,), 0.5, dtype),
+            "ck": init_dense(keys[8], d, cfg.d_ff, dtype),
+            "cv": init_dense(keys[9], cfg.d_ff, d, dtype),
+            "cr": init_dense(keys[10], d, d, dtype),
+        }
+        return p
+
+    # -- helpers --------------------------------------------------------- #
+    @staticmethod
+    def _shift(x, last=None):
+        """Token shift: x_{t-1} (zeros / `last` for t=0).  x [B,S,d]."""
+        if last is None:
+            last = jnp.zeros_like(x[:, :1])
+        else:
+            last = last[:, None].astype(x.dtype)
+        return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+    @staticmethod
+    def _time_mix_inputs(p, cfg, x, shifted):
+        def mix(mu):
+            m = p[mu].astype(x.dtype)
+            return x * m + shifted * (1 - m)
+        H = cfg.n_heads
+        hd = cfg.head_dim
+        B, S, d = x.shape
+        r = dense(p["wr"], mix("mix_r")).reshape(B, S, H, hd)
+        k = dense(p["wk"], mix("mix_k")).reshape(B, S, H, hd)
+        v = dense(p["wv"], mix("mix_v")).reshape(B, S, H, hd)
+        g = jax.nn.silu(dense(p["wg"], mix("mix_g")))
+        wd = dense(p["w_lora_b"],
+                   jnp.tanh(dense(p["w_lora_a"], mix("mix_w"))))
+        w = jnp.exp(-jnp.exp((p["w_base"].astype(jnp.float32)
+                              + wd.astype(jnp.float32))))
+        w = w.reshape(B, S, H, hd)
+        return r, k, v, g, w
+
+    @staticmethod
+    def apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              impl: str = "auto") -> jax.Array:
+        B, S, d = x.shape
+        H, hd = cfg.n_heads, cfg.head_dim
+        # --- time mix
+        shifted = RWKV6Block._shift(x)
+        r, k, v, g, w = RWKV6Block._time_mix_inputs(p, cfg, x, shifted)
+        u = p["u"].astype(jnp.float32).reshape(H, hd)
+        o, _ = ops.rwkv6(r, k, v, w.astype(x.dtype), u, impl=impl)
+        o = rms_norm(p["ln_x"], o.reshape(B, S, d))
+        y = x + dense(p["wo"], o * g)
+        # --- channel mix
+        shifted2 = RWKV6Block._shift(y)
+        mk = p["cmix_k"].astype(y.dtype)
+        mr = p["cmix_r"].astype(y.dtype)
+        xk = y * mk + shifted2 * (1 - mk)
+        xr = y * mr + shifted2 * (1 - mr)
+        kk = jnp.square(jax.nn.relu(dense(p["ck"], xk)))
+        return y + jax.nn.sigmoid(dense(p["cr"], xr)) * dense(p["cv"], kk)
+
+    # -- decode ---------------------------------------------------------- #
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+        H, hd = cfg.n_heads, cfg.head_dim
+        d = cfg.d_model
+        return {
+            "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "last_tm": jnp.zeros((batch, d), dtype),
+            "last_cm": jnp.zeros((batch, d), dtype),
+        }
+
+    @staticmethod
+    def apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array) -> tuple[jax.Array, dict]:
+        B, _, d = x.shape
+        H, hd = cfg.n_heads, cfg.head_dim
+        shifted = RWKV6Block._shift(x, cache["last_tm"])
+        r, k, v, g, w = RWKV6Block._time_mix_inputs(p, cfg, x, shifted)
+        u = p["u"].astype(jnp.float32).reshape(H, hd)
+        o, state = ops.rwkv6(r, k, v, w.astype(x.dtype), u,
+                             s0=cache["state"], impl="ref")
+        o = rms_norm(p["ln_x"], o.reshape(B, 1, d))
+        y = x + dense(p["wo"], o * g)
+        shifted2 = RWKV6Block._shift(y, cache["last_cm"])
+        mk = p["cmix_k"].astype(y.dtype)
+        mr = p["cmix_r"].astype(y.dtype)
+        xk = y * mk + shifted2 * (1 - mk)
+        xr = y * mr + shifted2 * (1 - mr)
+        kk = jnp.square(jax.nn.relu(dense(p["ck"], xk)))
+        out = y + jax.nn.sigmoid(dense(p["cr"], xr)) * dense(p["cv"], kk)
+        return out, {"state": state, "last_tm": x[:, 0],
+                     "last_cm": y[:, 0]}

@@ -1,0 +1,83 @@
+"""Error-feedback int8 gradient compression for the DCN (pod) axis.
+
+Cross-pod gradient all-reduces ride the data-center network, which is an
+order of magnitude slower than ICI — compressing the pod-axis reduction
+4x (f32 -> int8 + per-block scales) moves the DCN term of the roofline
+down.  Error feedback keeps the quantisation bias out of the training
+trajectory (residual carried to the next step).
+
+Pure-jnp, pytree-generic; the compressed representation is what a
+production DCN reducer would put on the wire, and the error-feedback
+state shards exactly like the gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_feedback", "compress_grads", "decompress_grads",
+           "ef_compress_cycle", "compressed_bytes"]
+
+_BLOCK = 256
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8: returns (q int8 [N], scales f32 [blocks])."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def compress_grads(grads):
+    return jax.tree.map(_quantize, grads)
+
+
+def decompress_grads(compressed, template):
+    return jax.tree.map(
+        lambda qs, t: _dequantize(qs[0], qs[1], t.shape),
+        compressed, template,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def ef_compress_cycle(grads, ef_state):
+    """One error-feedback round: returns (decompressed grads to apply,
+    new error state).  apply(g) == g only in aggregate over steps."""
+    def leaf(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = _quantize(target)
+        deq = _dequantize(q, s, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    pairs = jax.tree.map(leaf, grads, ef_state)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return out, new_ef
+
+
+def compressed_bytes(grads) -> tuple[int, int]:
+    """(raw f32 bytes, compressed wire bytes) for reporting."""
+    raw = comp = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        raw += n * 4
+        comp += n + 4 * ((n + _BLOCK - 1) // _BLOCK)
+    return raw, comp

@@ -1,0 +1,2 @@
+from .fault_tolerance import ElasticMesh, StragglerDetector, TrainSupervisor
+__all__ = ["ElasticMesh", "StragglerDetector", "TrainSupervisor"]

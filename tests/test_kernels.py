@@ -1,0 +1,220 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. the ref.py oracles
+(assignment requirement: per-kernel allclose against the pure-jnp ref)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref, rglru_ref, rwkv6_ref
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.rwkv6 import rwkv6_scan
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+FA_CASES = [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, window, softcap, dtype)
+    (2, 128, 128, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 256, 256, 8, 1, 64, True, 64, None, jnp.float32),    # MQA + window
+    (2, 64, 64, 4, 4, 128, True, None, 50.0, jnp.float32),   # softcap
+    (1, 100, 100, 2, 2, 64, False, None, None, jnp.float32), # non-divisible
+    (1, 192, 320, 4, 2, 64, True, None, None, jnp.float32),  # Sq != Sk
+    (2, 128, 128, 4, 2, 64, True, None, None, jnp.bfloat16),
+    (1, 128, 128, 6, 3, 32, True, 32, 30.0, jnp.float32),    # all features
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_vs_ref(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, window, cap, dt = case
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (B, Sq, Hq, D), dt)
+    k = _rand(rng, (B, Sk, Hkv, D), dt)
+    v = _rand(rng, (B, Sk, Hkv, D), dt)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=64, block_k=64)
+    tol = 2e-5 if dt == jnp.float32 else 2e-2
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < tol, (case, err)
+
+
+def test_chunked_attention_vs_ref_decode_path():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (2, 4, 4, 32), jnp.float32)
+    k = _rand(rng, (2, 1500, 2, 32), jnp.float32)
+    v = _rand(rng, (2, 1500, 2, 32), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, q_offset=900,
+                        kv_len=jnp.int32(1000))
+    out = ops.attention(q, k, v, causal=True, q_offset=900,
+                        kv_len=jnp.int32(1000), impl="chunked")
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+
+def test_chunked_attention_mla_head_dims():
+    """MLA: qk head dim 192 != v head dim 128."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 80, 4, 24), jnp.float32)
+    k = _rand(rng, (1, 80, 4, 24), jnp.float32)
+    v = _rand(rng, (1, 80, 4, 16), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, scale=24 ** -0.5)
+    out = ops.attention(q, k, v, causal=True, scale=24 ** -0.5,
+                        impl="chunked")
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+
+def test_attention_grad_finite():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 32, 2, 16), jnp.float32)
+    k = _rand(rng, (1, 32, 2, 16), jnp.float32)
+    v = _rand(rng, (1, 32, 2, 16), jnp.float32)
+
+    def f(q, k, v):
+        return ops.attention(q, k, v, causal=True, impl="ref").sum()
+
+    grads = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for g in grads:
+        assert bool(jnp.isfinite(g).all())
+
+
+# ---------------------------------------------------------------------- #
+# RG-LRU
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,D,bd,dt", [
+    (2, 64, 128, 64, jnp.float32),
+    (1, 33, 96, 128, jnp.float32),      # non-divisible feature block
+    (2, 64, 128, 64, jnp.bfloat16),
+])
+def test_rglru_kernel_vs_ref(B, S, D, bd, dt):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (B, S, D), dt)
+    a = jnp.asarray(rng.uniform(0.05, 0.99, (B, S, D)), dt)
+    h_ref, hl_ref = rglru_ref(x, a)
+    h_k, hl_k = rglru_scan(x, a, block_d=bd)
+    tol = 1e-5 if dt == jnp.float32 else 3e-2
+    assert float(jnp.abs(h_ref.astype(jnp.float32)
+                         - h_k.astype(jnp.float32)).max()) < tol
+    assert float(jnp.abs(hl_ref.astype(jnp.float32)
+                         - hl_k.astype(jnp.float32)).max()) < tol
+
+
+def test_rglru_carries_state():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (1, 16, 8), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 0.9, (1, 16, 8)), jnp.float32)
+    full, hl = rglru_ref(x, a)
+    # split into two halves with state carry
+    h1, s1 = rglru_ref(x[:, :8], a[:, :8])
+    h2, s2 = rglru_ref(x[:, 8:], a[:, 8:], h0=s1)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.concatenate([h1, h2], axis=1),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(s2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# RWKV6
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,H,Dk,Dv", [
+    (2, 32, 2, 16, 16),
+    (1, 48, 4, 32, 32),
+    (1, 16, 1, 8, 24),     # Dk != Dv
+])
+def test_rwkv6_kernel_vs_ref(B, S, H, Dk, Dv):
+    rng = np.random.default_rng(0)
+    r = _rand(rng, (B, S, H, Dk), jnp.float32)
+    k = _rand(rng, (B, S, H, Dk), jnp.float32) * 0.3
+    v = _rand(rng, (B, S, H, Dv), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.4, 0.99, (B, S, H, Dk)), jnp.float32)
+    u = _rand(rng, (H, Dk), jnp.float32) * 0.1
+    o_ref, s_ref = rwkv6_ref(r, k, v, w, u)
+    o_k, s_k = rwkv6_scan(r, k, v, w, u)
+    assert float(jnp.abs(o_ref - o_k).max()) < 1e-5
+    assert float(jnp.abs(s_ref - s_k).max()) < 1e-5
+
+
+def test_rwkv6_state_carry():
+    rng = np.random.default_rng(1)
+    B, S, H, D = 1, 20, 2, 8
+    r = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32) * 0.3
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 0.95, (B, S, H, D)), jnp.float32)
+    u = _rand(rng, (H, D), jnp.float32) * 0.1
+    full, s_full = rwkv6_ref(r, k, v, w, u)
+    o1, s1 = rwkv6_ref(r[:, :10], k[:, :10], v[:, :10], w[:, :10], u)
+    o2, s2 = rwkv6_ref(r[:, 10:], k[:, 10:], v[:, 10:], w[:, 10:], u,
+                       s0=s1)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.concatenate([o1, o2], axis=1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# chunk-parallel WKV6 (the production training path — §Perf iteration)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (2, 128, 2, 16, 32), (1, 256, 4, 32, 64), (1, 64, 2, 16, 64),
+])
+def test_rwkv6_chunked_vs_ref(B, S, H, D, chunk):
+    from repro.kernels.ref import rwkv6_chunked
+    rng = np.random.default_rng(0)
+    r = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32) * 0.3
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.uniform(-6, 1.5, (B, S, H, D)))),
+                    jnp.float32)
+    u = _rand(rng, (H, D), jnp.float32) * 0.1
+    s0 = _rand(rng, (B, H, D, D), jnp.float32) * 0.1
+    o_ref, s_ref = rwkv6_ref(r, k, v, w, u, s0=s0)
+    o_ch, s_ch = rwkv6_chunked(r, k, v, w, u, s0=s0, chunk=chunk)
+    assert float(jnp.abs(o_ref - o_ch).max()) < 5e-4
+    assert float(jnp.abs(s_ref - s_ch).max()) < 5e-4
+
+
+def test_rwkv6_chunked_adversarial_decay():
+    """Harsh constant decay channel: the two-level factorisation must not
+    overflow (the failure mode of a single-level log-space split)."""
+    from repro.kernels.ref import rwkv6_chunked
+    rng = np.random.default_rng(1)
+    B, S, H, D = 1, 128, 2, 16
+    r = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32) * 0.3
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    wnp = np.exp(-np.exp(rng.uniform(-6, 1.5, (B, S, H, D))))
+    wnp[..., 0] = np.exp(-np.exp(2.3))    # ~1e-4 decay every step
+    w = jnp.asarray(wnp, jnp.float32)
+    u = _rand(rng, (H, D), jnp.float32) * 0.1
+    o_ref, s_ref = rwkv6_ref(r, k, v, w, u)
+    o_ch, s_ch = rwkv6_chunked(r, k, v, w, u, chunk=64)
+    assert bool(jnp.isfinite(o_ch).all())
+    assert float(jnp.abs(o_ref - o_ch).max()) < 5e-4
+
+
+def test_rwkv6_chunked_grad_finite():
+    from repro.kernels.ref import rwkv6_chunked
+    rng = np.random.default_rng(2)
+    B, S, H, D = 1, 64, 2, 8
+    r = _rand(rng, (B, S, H, D), jnp.float32)
+    k = _rand(rng, (B, S, H, D), jnp.float32) * 0.3
+    v = _rand(rng, (B, S, H, D), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.uniform(-4, 1, (B, S, H, D)))),
+                    jnp.float32)
+    u = _rand(rng, (H, D), jnp.float32) * 0.1
+
+    def f(r, k, v, w):
+        out, _ = rwkv6_chunked(r, k, v, w, u, chunk=32)
+        return (out ** 2).mean()
+
+    grads = jax.grad(f, argnums=(0, 1, 2, 3))(r, k, v, w)
+    for g in grads:
+        assert bool(jnp.isfinite(g).all())

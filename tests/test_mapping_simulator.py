@@ -1,0 +1,114 @@
+"""Memory-centric mapping (Algorithm 2) + NUMA simulator behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import (Machine, build_graph, cluster_interaction_graphs,
+                        edge_cut, memory_centric_mapping,
+                        round_robin_mapping, run_pipeline, simulate,
+                        vertex_bytes_model, vertex_cut)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return build_graph("kmeans", scale="reduced", cache_dir=None)
+
+
+def test_machine_geometry():
+    m = Machine(rows=4, cols=4)
+    assert m.n_cores == 16
+    assert m.hops(0, 15) == 6  # (0,0) -> (3,3) XY route
+    assert m.hops(5, 5) == 0
+    regions = {m.region_of(c) for c in range(16)}
+    assert len(regions) == 4  # quadrant decomposition
+
+
+def test_machine_for_clusters_caps_cores():
+    m = Machine.for_clusters(1024, max_cores=64)
+    assert m.n_cores == 64
+    assert m.cluster_threshold >= 16  # 1024 clusters must fit
+
+
+def test_mapping_spreads_when_cores_available(g):
+    p = 8
+    cut = vertex_cut(g, p, method="wb_libra")
+    comm, shared = cluster_interaction_graphs(cut.replicas, p,
+                                              vertex_bytes_model(g))
+    mapping = memory_centric_mapping(comm, shared, Machine.for_clusters(p))
+    # with >= p cores, parallelism should not collapse
+    assert mapping.cores_used >= p // 2
+    assert len(mapping.core_of) == p
+    counts = np.bincount(mapping.core_of,
+                         minlength=mapping.machine.n_cores)
+    assert counts.max() <= mapping.machine.cluster_threshold
+
+
+def test_mapping_respects_threshold(g):
+    p = 32
+    cut = vertex_cut(g, p, method="wb_libra")
+    comm, shared = cluster_interaction_graphs(cut.replicas, p)
+    mach = Machine(rows=2, cols=2, cluster_threshold=8)
+    mapping = memory_centric_mapping(comm, shared, mach)
+    counts = np.bincount(mapping.core_of, minlength=4)
+    assert counts.max() <= 8
+
+
+def test_memory_centric_beats_round_robin_on_comm(g):
+    """Factor-2 adjacency should reduce average message distance."""
+    p = 16
+    cut = vertex_cut(g, p, method="wb_libra")
+    comm, shared = cluster_interaction_graphs(cut.replicas, p,
+                                              vertex_bytes_model(g))
+    mach = Machine(rows=4, cols=4)
+    smart = memory_centric_mapping(comm, shared, mach)
+    naive = round_robin_mapping(p, mach)
+
+    def weighted_hops(mapping):
+        tot = 0.0
+        for i in range(p):
+            for j in range(p):
+                if comm[i, j] > 0:
+                    tot += comm[i, j] * mach.hops(
+                        int(mapping.core_of[i]), int(mapping.core_of[j]))
+        return tot
+
+    assert weighted_hops(smart) <= weighted_hops(naive) * 1.05
+
+
+def test_simulator_parallel_speedup(g):
+    """More clusters -> shorter simulated time (up to core budget)."""
+    _, _, r2 = run_pipeline(g, 2, "wb_libra")
+    _, _, r16 = run_pipeline(g, 16, "wb_libra")
+    assert r16.exec_time < r2.exec_time
+
+
+def test_simulator_vertex_cut_comm_less_than_edge_cut(g):
+    """§6.2.4 headline: vertex-cut traffic (replica sync) is lower than
+    edge-cut traffic (all cut edges) on power-law trace graphs."""
+    p = 8
+    _, _, vc = run_pipeline(g, p, "wb_libra")
+    _, _, ec = run_pipeline(g, p, "compnet")
+    assert vc.data_comm_bytes < ec.data_comm_bytes
+
+
+def test_simulate_type_dispatch(g):
+    p = 4
+    cut = vertex_cut(g, p, method="wb_libra")
+    comm, shared = cluster_interaction_graphs(cut.replicas, p)
+    mapping = memory_centric_mapping(comm, shared, Machine.for_clusters(p))
+    rep = simulate(g, cut, mapping)
+    assert rep.exec_time > 0
+    ec = edge_cut(g, p, method="metis")
+    rep2 = simulate(g, ec, mapping)
+    assert rep2.exec_time > 0
+    with pytest.raises(TypeError):
+        simulate(g, "not a partition", mapping)
+
+
+def test_edge_cut_methods(g):
+    for method in ("compnet", "metis"):
+        r = edge_cut(g, 8, method=method)
+        assert len(r.parts) == g.n
+        assert r.parts.min() >= 0 and r.parts.max() < 8
+        assert 0 <= r.cut_weight <= g.total_weight
+    with pytest.raises(ValueError):
+        edge_cut(g, 8, method="nope")

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (assignment: reduced same-family configs,
+one forward/train step on CPU, output shapes + no NaNs) + decode
+equivalence."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import ParallelConfig
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.optim import AdamWConfig, adamw_init
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=24, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, 4, cfg.d_model)), jnp.float32)
+    if cfg.n_encoder_layers:
+        batch["frame_embeds"] = jnp.asarray(
+            rng.standard_normal((B, 8, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def setups():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced_config(ARCHS[name])
+            params = models.init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_and_finite(setups, name):
+    cfg, params = setups(name)
+    batch = _batch(cfg)
+    logits, aux = models.forward(cfg, params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), name
+    assert bool(jnp.isfinite(aux)), name
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_improves_nothing_nan(setups, name):
+    cfg, params = setups(name)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    par = ParallelConfig(fsdp=False, tp=False, microbatches=1,
+                         remat="none")
+    step = make_train_step(cfg, opt_cfg, par)
+    opt = adamw_init(params, opt_cfg)
+    batch = _batch(cfg, S=16)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_opt["step"]) == 1
+    # params actually changed
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(diffs)) > 0, name
+
+
+@pytest.mark.parametrize("name", ["granite-3-2b", "gemma2-27b",
+                                  "recurrentgemma-9b", "rwkv6-7b",
+                                  "qwen2-vl-2b"])
+def test_decode_matches_forward(setups, name):
+    cfg, params = setups(name)
+    B, S = 2, 10
+    batch = _batch(cfg, B=B, S=S)
+    if cfg.frontend == "vision":
+        batch.pop("patch_embeds")  # text-only decode comparison
+    ref, _ = models.forward(cfg, params, batch)
+    cache = models.init_cache(cfg, B, max_len=S)
+    errs = []
+    for t in range(S):
+        logits, cache = models.decode_step(
+            cfg, params, cache, batch["tokens"][:, t], jnp.int32(t))
+        errs.append(float(jnp.abs(logits - ref[:, t]).max()))
+    assert max(errs) < 1e-4, (name, errs)
+
+
+def test_decode_matches_forward_moe_dropless(setups):
+    cfg, params = setups("dbrx-132b")
+    cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    B, S = 2, 8
+    batch = _batch(cfg, B=B, S=S)
+    ref, _ = models.forward(cfg, params, batch)
+    cache = models.init_cache(cfg, B, max_len=S)
+    for t in range(S):
+        logits, cache = models.decode_step(
+            cfg, params, cache, batch["tokens"][:, t], jnp.int32(t))
+        assert float(jnp.abs(logits - ref[:, t]).max()) < 1e-4
+
+
+def test_windowed_ring_buffer_cache(setups):
+    """gemma2 local layers keep only `window` positions — decoding past
+    the window must still match the windowed forward."""
+    cfg, params = setups("gemma2-27b")
+    assert cfg.local_window == 32  # reduced config window
+    B, S = 1, 40                   # exceeds the window
+    batch = _batch(cfg, B=B, S=S)
+    ref, _ = models.forward(cfg, params, batch)
+    cache = models.init_cache(cfg, B, max_len=S)
+    errs = []
+    for t in range(S):
+        logits, cache = models.decode_step(
+            cfg, params, cache, batch["tokens"][:, t], jnp.int32(t))
+        errs.append(float(jnp.abs(logits - ref[:, t]).max()))
+    assert max(errs) < 1e-4, errs
+
+
+def test_serve_step_greedy(setups):
+    cfg, params = setups("smollm-360m")
+    step = make_serve_step(cfg)
+    cache = models.init_cache(cfg, 2, max_len=8)
+    tok = jnp.zeros((2,), jnp.int32)
+    nxt, cache = step(params, cache, tok, jnp.int32(0))
+    assert nxt.shape == (2,)
+    assert nxt.dtype == jnp.int32
+
+
+def test_remat_matches_no_remat(setups):
+    cfg, params = setups("smollm-360m")
+    batch = _batch(cfg, S=12)
+    a, _ = models.forward(cfg, params, batch, remat=False)
+    b, _ = models.forward(cfg, params, batch, remat=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mtp_loss_larger_than_plain(setups):
+    """DeepSeek MTP adds an auxiliary term: loss(mtp) > plain CE."""
+    cfg, params = setups("deepseek-v3-671b")
+    batch = _batch(cfg, S=16)
+    full = models.loss_fn(cfg, params, batch)
+    plain = models.loss_fn(cfg, params, batch, mtp_weight=0.0,
+                           aux_weight=0.0)
+    assert float(full) > float(plain)
+
+
+def test_param_count_formula_matches_init():
+    """Analytic param_count (used for MODEL_FLOPS) tracks real init."""
+    for name in ("smollm-360m", "granite-3-2b", "rwkv6-7b"):
+        cfg = ARCHS[name]
+        small = reduced_config(cfg)
+        params = models.init_params(small, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        predicted = small.param_count()
+        assert abs(actual - predicted) / actual < 0.25, \
+            (name, actual, predicted)
