@@ -1,0 +1,111 @@
+"""CI perf gate: compare a BENCH_*.json run against a committed baseline.
+
+    python benchmarks/check_regression.py BENCH_partitioner_scaling.json \
+        benchmarks/baselines/partitioner_scaling.json --factor 2.0
+
+Rows are matched on their identity keys (every key except the measured
+ones) and compared after machine calibration: the reference-backend rows
+act as a speed probe of the host (their engine never changes), so every
+ratio is divided by ``median(run_ref / baseline_ref)``.  The gate then
+fails a *backend* whose geometric-mean calibrated ratio exceeds
+``factor`` — a real engine regression shifts every row, while scheduler
+noise on a sub-millisecond row only perturbs one, so aggregating keeps
+a 2x gate usable on shared CI runners.  Baseline rows missing from the
+run are reported (coverage must not silently shrink); new rows pass
+(they have no baseline yet).  Exits 1 on any regression or lost
+coverage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+MEASURED = {"us_per_edge", "us_total", "replication_factor"}
+METRIC = "us_per_edge"
+
+
+def _key(row: dict) -> tuple:
+    return tuple(sorted((k, v) for k, v in row.items() if k not in MEASURED))
+
+
+def _load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    return {_key(r): r for r in rows if METRIC in r}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("run_json")
+    ap.add_argument("baseline_json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="allowed slowdown vs baseline (default 2.0)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="also require meta.speedup_E32k_p512 >= this")
+    args = ap.parse_args(argv)
+
+    run = _load_rows(args.run_json)
+    base = _load_rows(args.baseline_json)
+
+    # host-speed calibration from the reference-backend rows
+    ref_ratios = sorted(
+        run[k][METRIC] / max(base[k][METRIC], 1e-12)
+        for k in set(run) & set(base)
+        if dict(k).get("backend") == "reference")
+    calib = ref_ratios[len(ref_ratios) // 2] if ref_ratios else 1.0
+    print(f"machine calibration: x{calib:.2f} "
+          f"({len(ref_ratios)} reference rows)")
+
+    failures = []
+    by_backend: dict = {}
+    for key, brow in sorted(base.items()):
+        rrow = run.get(key)
+        tag = "/".join(f"{k}={v}" for k, v in key)
+        if rrow is None:
+            failures.append(f"MISSING  {tag} (baseline coverage lost)")
+            continue
+        ratio = rrow[METRIC] / max(brow[METRIC] * calib, 1e-12)
+        by_backend.setdefault(dict(key).get("backend", "?"),
+                              []).append(ratio)
+        flag = " " if ratio <= args.factor else "*"
+        print(f"{flag} {tag}: {rrow[METRIC]:.3f} us/edge "
+              f"(baseline {brow[METRIC]:.3f}, x{ratio:.2f})")
+    for backend, ratios in sorted(by_backend.items()):
+        gmean = math.exp(sum(math.log(max(r, 1e-12)) for r in ratios)
+                         / len(ratios))
+        status = "OK" if gmean <= args.factor else "REGRESSED"
+        print(f"{status:9} backend={backend}: geomean x{gmean:.2f} "
+              f"over {len(ratios)} rows (gate x{args.factor})")
+        if gmean > args.factor:
+            failures.append(f"backend={backend}: geomean x{gmean:.2f} "
+                            f"> x{args.factor}")
+    for key in sorted(set(run) - set(base)):
+        print(f"NEW       {'/'.join(f'{k}={v}' for k, v in key)}: "
+              f"{run[key][METRIC]:.3f} us/edge (no baseline)")
+
+    if args.min_speedup is not None:
+        with open(args.run_json) as f:
+            meta = json.load(f).get("meta", {})
+        sp = meta.get("speedup_E32k_p512")
+        if sp is None or sp < args.min_speedup:
+            failures.append(
+                f"fast-vs-reference speedup {sp} < {args.min_speedup}")
+        else:
+            print(f"OK        speedup_E32k_p512 = {sp}x "
+                  f"(gate {args.min_speedup}x)")
+
+    if failures:
+        print("\nPERF GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate passed: {len(by_backend)} backend groups "
+          f"({len(base)} baseline rows) within geomean x{args.factor}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,24 +1,71 @@
 """Paper §4.4 complexity claim: Weight Balanced Libra is O(|E|·|C|) —
-measured here as near-linear edge throughput across |E| and mild growth
-in |C| (our lazy-heap engine is O(|E| log |C|), a better constant)."""
+measured as edge throughput across |E| and |C| for both streaming
+engines.  The fast backend (array-native; C kernel when a compiler is
+present) is benchmarked against the reference oracle loop at the paper's
+1024-cluster scale and on a >=500k-edge power-law graph; the reference
+is swept only at the 32k-vertex scale where it finishes in seconds.
+
+Emits the usual CSV rows plus machine-readable
+`BENCH_partitioner_scaling.json` (see benchmarks/check_regression.py for
+the CI perf gate against the committed baseline).
+"""
 from __future__ import annotations
 
-from repro.core import synthesize_powerlaw_graph, vertex_cut
+from repro.core import resolve_backend, synthesize_powerlaw_graph, vertex_cut
 
-from .common import emit, timed
+from .common import emit, timed_best, write_bench_json
+
+# (n, p sweep, backends); the reference oracle only runs at <=32k vertices
+SMALL_NS = (2_000, 8_000, 32_000)
+SMALL_PS = (8, 64, 512)
+BIG_N = 300_000          # >=500k edges at alpha=2.2 (paper §4.4 scale)
+BIG_PS = (512, 1024)
+REPEATS = 5
+
+
+def _row(g, n, p, backend, repeats=REPEATS):
+    r, us = timed_best(vertex_cut, g, p, method="wb_libra",
+                       backend=backend, repeats=repeats)
+    per_edge = us / max(g.num_edges, 1)
+    row = {"n": n, "edges": g.num_edges, "p": p, "backend": backend,
+           "us_per_edge": round(per_edge, 4), "us_total": round(us, 1),
+           "replication_factor": round(r.replication_factor, 4)}
+    emit(f"partitioner_scaling/E{g.num_edges}/p{p}/{backend}", us,
+         f"us_per_edge={per_edge:.3f}")
+    return row
 
 
 def run() -> list[dict]:
+    engine = resolve_backend("fast")
     rows = []
-    for n in (2_000, 8_000, 32_000):
+    by_key = {}
+    for n in SMALL_NS:
         g = synthesize_powerlaw_graph(n=n, alpha=2.2, seed=0)
-        for p in (8, 64, 512):
-            r, us = timed(vertex_cut, g, p, method="wb_libra")
-            per_edge = us / max(g.num_edges, 1)
-            rows.append({"edges": g.num_edges, "p": p,
-                         "us_per_edge": per_edge})
-            emit(f"partitioner_scaling/E{g.num_edges}/p{p}", us,
-                 f"us_per_edge={per_edge:.3f}")
+        for p in SMALL_PS:
+            for backend in ("fast", "reference"):
+                # reference rows double as the machine-speed calibration
+                # probe in check_regression.py — keep them best-of-2
+                row = _row(g, n, p, backend,
+                           repeats=REPEATS if backend == "fast" else 2)
+                rows.append(row)
+                by_key[(n, p, backend)] = row
+
+    # headline ratio at the paper's scaling point (32k vertices, p=512)
+    fast = by_key[(32_000, 512, "fast")]
+    ref = by_key[(32_000, 512, "reference")]
+    speedup = ref["us_per_edge"] / max(fast["us_per_edge"], 1e-9)
+    emit("partitioner_scaling/speedup_E32k_p512", fast["us_total"],
+         f"fast_vs_reference={speedup:.1f}x")
+
+    # paper §4.4 scale: >=500k edges, up to 1024 clusters (fast only —
+    # the reference loop needs minutes here)
+    g = synthesize_powerlaw_graph(n=BIG_N, alpha=2.2, seed=0)
+    for p in BIG_PS:
+        rows.append(_row(g, BIG_N, p, "fast", repeats=1))
+
+    write_bench_json("partitioner_scaling", rows,
+                     meta={"engine": engine,
+                           "speedup_E32k_p512": round(speedup, 2)})
     return rows
 
 

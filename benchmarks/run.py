@@ -1,8 +1,11 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Default runs at reduced
-graph scale (CI-friendly); ``--paper`` uses the paper's Table 3 input
-sizes; ``--graphs`` limits to a comma list.
+Prints ``name,us_per_call,derived`` CSV rows and writes each suite's
+rows to machine-readable ``BENCH_<suite>.json`` (``BENCH_OUTPUT_DIR``
+overrides the target directory) so CI can track the perf trajectory —
+see ``benchmarks/check_regression.py``.  Default runs at reduced graph
+scale (CI-friendly); ``--paper`` uses the paper's Table 3 input sizes;
+``--graphs`` limits to a comma list.
 
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --paper --only execution_time
@@ -17,6 +20,10 @@ from . import (cluster_sweep, data_comm, edge_imbalance, edge_order_ablation,
                exec_and_comm, execution_time, expert_placement,
                lambda_sensitivity, partitioner_scaling, replication_factor,
                roofline)
+from .common import write_bench_json
+
+# suites that write their own BENCH_*.json with extra metadata
+SELF_WRITING = {"partitioner_scaling"}
 
 SUITES = {
     "replication_factor": lambda a: replication_factor.run(
@@ -51,17 +58,22 @@ def main() -> None:
     args.names = args.graphs.split(",") if args.graphs else None
 
     only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(SUITES):
+        sys.exit(f"unknown suite(s): {sorted(only - set(SUITES))}; "
+                 f"choose from {sorted(SUITES)}")
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            fn(args)
+            rows = fn(args)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}",
                   file=sys.stderr)
             raise
+        if rows and name not in SELF_WRITING:
+            write_bench_json(name, rows)
         print(f"# suite {name} done in {time.time() - t0:.1f}s",
               file=sys.stderr)
 

@@ -1,0 +1,55 @@
+"""Shared vectorized edge-array helpers for the partitioners.
+
+Used by `graph.IRGraph.csr`, the METIS-like coarsener in `edge_cut`, and
+the vectorized `_finalize` of `vertex_cut` — one implementation of the
+sort-based grouping primitives instead of three hand-rolled loops.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["csr_adjacency", "dedup_edges", "replica_csr"]
+
+
+def csr_adjacency(n: int, src: np.ndarray, dst: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Undirected CSR adjacency: (indptr, neighbor ids, edge ids)."""
+    m = len(src)
+    ends = np.concatenate([src, dst])
+    other = np.concatenate([dst, src])
+    eid = np.concatenate([np.arange(m), np.arange(m)])
+    order = np.argsort(ends, kind="stable")
+    ends, other, eid = ends[order], other[order], eid[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, ends + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, other.astype(np.int32), eid.astype(np.int64)
+
+
+def dedup_edges(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Merge parallel edges, summing their weights."""
+    key = src.astype(np.int64) * n + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst, w = key[order], src[order], dst[order], w[order]
+    first = np.ones(len(key), dtype=bool)
+    first[1:] = key[1:] != key[:-1]
+    idx = np.cumsum(first) - 1
+    ws = np.zeros(int(first.sum()))
+    np.add.at(ws, idx, w)
+    return src[first], dst[first], ws
+
+
+def replica_csr(n: int, p: int, src: np.ndarray, dst: np.ndarray,
+                assignment: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-vertex replica sets A(v) as a CSR over sorted cluster ids.
+
+    A vertex's replica set is the set of clusters hosting an incident
+    edge; vectorized as a unique-sort over (vertex, cluster) pairs.
+    Returns (indptr int64[n+1], flat int32[sum |A(v)|]).
+    """
+    v = np.concatenate([src, dst]).astype(np.int64)
+    c = np.concatenate([assignment, assignment]).astype(np.int64)
+    key = np.unique(v * p + c)
+    indptr = np.searchsorted(key, np.arange(n + 1, dtype=np.int64) * p)
+    return indptr.astype(np.int64), (key % p).astype(np.int32)

@@ -19,6 +19,7 @@ import dataclasses
 
 import numpy as np
 
+from ._arrayops import csr_adjacency, dedup_edges
 from .graph import IRGraph
 
 __all__ = ["EdgeCutResult", "edge_cut", "EDGE_CUT_METHODS"]
@@ -148,7 +149,7 @@ def _metis_like(g: IRGraph, p: int, seed: int,
             break
         s2, d2 = match[src], match[dst]
         keep = s2 != d2
-        s2, d2, w2 = _dedup_edges(n2, s2[keep], d2[keep], w[keep])
+        s2, d2, w2 = dedup_edges(n2, s2[keep], d2[keep], w[keep])
         work2 = np.zeros(n2)
         np.add.at(work2, match, work)
         matches.append(match)
@@ -182,18 +183,6 @@ def _heavy_edge_matching(n, src, dst, w, rng) -> np.ndarray:
     return matched
 
 
-def _dedup_edges(n, src, dst, w):
-    key = src.astype(np.int64) * n + dst
-    order = np.argsort(key, kind="stable")
-    key, src, dst, w = key[order], src[order], dst[order], w[order]
-    first = np.ones(len(key), dtype=bool)
-    first[1:] = key[1:] != key[:-1]
-    idx = np.cumsum(first) - 1
-    ws = np.zeros(int(first.sum()))
-    np.add.at(ws, idx, w)
-    return src[first], dst[first], ws
-
-
 def _lpt_initial(n, src, dst, w, work, p, rng) -> np.ndarray:
     order = np.argsort(-work)
     parts = np.zeros(n, dtype=np.int32)
@@ -209,7 +198,7 @@ def _refine(n, src, dst, w, work, parts, p, passes: int = 3,
             balance_tol: float = 1.08) -> np.ndarray:
     if len(src) == 0:
         return parts
-    indptr, nbr, eid = _csr(n, src, dst)
+    indptr, nbr, eid = csr_adjacency(n, src, dst)
     ew = w
     loads = np.zeros(p)
     np.add.at(loads, parts, work)
@@ -246,16 +235,3 @@ def _refine(n, src, dst, w, work, parts, p, passes: int = 3,
         if moved == 0:
             break
     return parts
-
-
-def _csr(n, src, dst):
-    m = len(src)
-    ends = np.concatenate([src, dst])
-    other = np.concatenate([dst, src])
-    eidx = np.concatenate([np.arange(m), np.arange(m)])
-    order = np.argsort(ends, kind="stable")
-    ends, other, eidx = ends[order], other[order], eidx[order]
-    indptr = np.zeros(n + 1, dtype=np.int64)
-    np.add.at(indptr, ends + 1, 1)
-    np.cumsum(indptr, out=indptr)
-    return indptr, other, eidx

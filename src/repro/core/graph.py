@@ -14,6 +14,8 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from ._arrayops import csr_adjacency
+
 __all__ = ["IRGraph"]
 
 
@@ -109,16 +111,7 @@ class IRGraph:
     # ------------------------------------------------------------------ #
     def csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Undirected CSR adjacency: (indptr, neighbor ids, edge ids)."""
-        m = self.num_edges
-        ends = np.concatenate([self.src, self.dst])
-        other = np.concatenate([self.dst, self.src])
-        eid = np.concatenate([np.arange(m), np.arange(m)])
-        order = np.argsort(ends, kind="stable")
-        ends, other, eid = ends[order], other[order], eid[order]
-        indptr = np.zeros(self.n + 1, dtype=np.int64)
-        np.add.at(indptr, ends + 1, 1)
-        np.cumsum(indptr, out=indptr)
-        return indptr, other.astype(np.int32), eid.astype(np.int64)
+        return csr_adjacency(self.n, self.src, self.dst)
 
     @classmethod
     def from_edges(cls, edges: Iterable[tuple[int, int, float]],

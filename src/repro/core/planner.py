@@ -55,9 +55,9 @@ class PlanReport:
 
 
 def plan_graph(g: IRGraph, p: int, method: str = "wb_libra",
-               lam: float = 1.0, machine: Machine | None = None
-               ) -> PlanReport:
-    cut = vertex_cut(g, p, method=method, lam=lam)
+               lam: float = 1.0, machine: Machine | None = None,
+               backend: str = "fast") -> PlanReport:
+    cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
     comm, shared = cluster_interaction_graphs(cut.replicas, p,
                                               vertex_bytes_model(g))
     mapping = memory_centric_mapping(comm, shared,
@@ -68,19 +68,21 @@ def plan_graph(g: IRGraph, p: int, method: str = "wb_libra",
 
 
 def plan_step(fn, *args, p: int = 8, method: str = "wb_libra",
-              lam: float = 1.0, **kw) -> PlanReport:
+              lam: float = 1.0, backend: str = "fast", **kw) -> PlanReport:
     """Trace `fn(*args)` and plan its p-way partitioned execution."""
     g = trace_to_graph(fn, *args, **kw)
-    return plan_graph(g, p, method=method, lam=lam)
+    return plan_graph(g, p, method=method, lam=lam, backend=backend)
 
 
 def optimal_parallelism(fn, *args, candidates=(2, 4, 8, 16, 32),
-                        method: str = "wb_libra") -> tuple[int, list]:
+                        method: str = "wb_libra",
+                        backend: str = "fast") -> tuple[int, list]:
     """Pick the cluster count with the lowest simulated execution time —
     the paper's stated goal of 'discovering optimal parallelization
     degree' for a program."""
     g = trace_to_graph(fn, *args)
-    reports = [plan_graph(g, p, method=method) for p in candidates]
+    reports = [plan_graph(g, p, method=method, backend=backend)
+               for p in candidates]
     best = int(np.argmin([r.exec_time for r in reports]))
     return candidates[best], reports
 
@@ -115,7 +117,8 @@ def expert_placement(expert_load: np.ndarray,
                      co_activation: np.ndarray | None = None,
                      n_devices: int = 8, lam: float = 1.0,
                      seed: int = 0,
-                     max_replicas: int = 4) -> ExpertPlacement:
+                     max_replicas: int = 4,
+                     backend: str = "fast") -> ExpertPlacement:
     """WB-Libra placement of MoE experts across EP shards.
 
     Builds the expert co-activation graph (vertices = experts; edge (i,j)
@@ -155,7 +158,7 @@ def expert_placement(expert_load: np.ndarray,
         iu, ju, wts = iu[order], ju[order], wts[order]
     g = IRGraph(n=e_cnt, src=iu, dst=ju, w=wts, name="expert_coactivation")
     cut = vertex_cut(g, n_devices, method="wb_libra", lam=lam, seed=seed,
-                     edge_order="shuffled")
+                     edge_order="shuffled", backend=backend)
 
     expert_devices: list = []
     for ex in range(e_cnt):

@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's invariants (paper §4.2)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the [test] extra: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import IRGraph, vertex_cut
 from repro.core.powerlaw import expected_replication_random_empirical

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (ALGORITHMS, IRGraph, build_graph,
+from repro.core import (ALGORITHMS, build_graph,
                         expected_replication_random,
                         expected_replication_random_empirical,
                         synthesize_powerlaw_graph, vertex_cut)
@@ -18,9 +18,10 @@ def pl_graph():
     return synthesize_powerlaw_graph(n=2000, alpha=2.2, seed=1)
 
 
+@pytest.mark.parametrize("backend", ("fast", "python", "reference"))
 @pytest.mark.parametrize("method", ALGORITHMS)
-def test_every_edge_assigned_exactly_once(fft_graph, method):
-    r = vertex_cut(fft_graph, p=8, method=method)
+def test_every_edge_assigned_exactly_once(fft_graph, method, backend):
+    r = vertex_cut(fft_graph, p=8, method=method, backend=backend)
     assert len(r.assignment) == fft_graph.num_edges
     assert r.assignment.min() >= 0 and r.assignment.max() < 8
     # loads/counts are consistent with the assignment
