@@ -2,6 +2,9 @@
 
     python benchmarks/check_regression.py BENCH_partitioner_scaling.json \
         benchmarks/baselines/partitioner_scaling.json --factor 2.0
+    python benchmarks/check_regression.py BENCH_mapping_pipeline.json \
+        benchmarks/baselines/mapping_pipeline.json --metric us_per_cluster \
+        --factor 2.0 --min-speedup 5 --speedup-key speedup_p1024
 
 Rows are matched on their identity keys (every key except the measured
 ones) and compared after machine calibration: the reference-backend rows
@@ -22,19 +25,19 @@ import json
 import math
 import sys
 
-MEASURED = {"us_per_edge", "us_total", "replication_factor"}
-METRIC = "us_per_edge"
+MEASURED = {"us_per_edge", "us_total", "replication_factor",
+            "us_per_cluster", "exec_time", "data_comm_bytes"}
 
 
 def _key(row: dict) -> tuple:
     return tuple(sorted((k, v) for k, v in row.items() if k not in MEASURED))
 
 
-def _load_rows(path: str) -> dict:
+def _load_rows(path: str, metric: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
     rows = doc["rows"] if isinstance(doc, dict) else doc
-    return {_key(r): r for r in rows if METRIC in r}
+    return {_key(r): r for r in rows if metric in r}
 
 
 def main(argv=None) -> int:
@@ -43,12 +46,29 @@ def main(argv=None) -> int:
     ap.add_argument("baseline_json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="allowed slowdown vs baseline (default 2.0)")
+    ap.add_argument("--metric", default="us_per_edge",
+                    help="measured column the gate compares "
+                         "(default us_per_edge)")
     ap.add_argument("--min-speedup", type=float, default=None,
-                    help="also require meta.speedup_E32k_p512 >= this")
+                    help="also require meta.<speedup-key> >= this")
+    ap.add_argument("--speedup-key", default="speedup_E32k_p512",
+                    help="meta key checked by --min-speedup")
+    ap.add_argument("--quality-fields", default=None,
+                    help="comma list of lower-is-better row fields (e.g. "
+                         "exec_time,data_comm_bytes) gated at "
+                         "--quality-factor; these are deterministic model "
+                         "outputs, so drift means the algorithm changed")
+    ap.add_argument("--quality-factor", type=float, default=1.01,
+                    help="allowed quality-field growth vs baseline "
+                         "(default 1.01)")
     args = ap.parse_args(argv)
+    METRIC = args.metric
+    quality = [f.strip() for f in (args.quality_fields or "").split(",")
+               if f.strip()]
+    quality_checks = dict.fromkeys(quality, 0)
 
-    run = _load_rows(args.run_json)
-    base = _load_rows(args.baseline_json)
+    run = _load_rows(args.run_json, METRIC)
+    base = _load_rows(args.baseline_json, METRIC)
 
     # host-speed calibration from the reference-backend rows
     ref_ratios = sorted(
@@ -71,8 +91,21 @@ def main(argv=None) -> int:
         by_backend.setdefault(dict(key).get("backend", "?"),
                               []).append(ratio)
         flag = " " if ratio <= args.factor else "*"
-        print(f"{flag} {tag}: {rrow[METRIC]:.3f} us/edge "
+        print(f"{flag} {tag}: {rrow[METRIC]:.3f} {METRIC} "
               f"(baseline {brow[METRIC]:.3f}, x{ratio:.2f})")
+        for field in quality:
+            if field not in brow:
+                continue            # baseline never tracked this field
+            if field not in rrow:
+                failures.append(f"QUALITY  {tag}: {field} missing from run "
+                                "(quality coverage lost)")
+                continue
+            quality_checks[field] += 1
+            qratio = rrow[field] / max(brow[field], 1e-30)
+            if qratio > args.quality_factor:
+                failures.append(f"QUALITY  {tag}: {field} {rrow[field]:.6g} "
+                                f"vs baseline {brow[field]:.6g} "
+                                f"(x{qratio:.3f} > x{args.quality_factor})")
     for backend, ratios in sorted(by_backend.items()):
         gmean = math.exp(sum(math.log(max(r, 1e-12)) for r in ratios)
                          / len(ratios))
@@ -84,17 +117,25 @@ def main(argv=None) -> int:
                             f"> x{args.factor}")
     for key in sorted(set(run) - set(base)):
         print(f"NEW       {'/'.join(f'{k}={v}' for k, v in key)}: "
-              f"{run[key][METRIC]:.3f} us/edge (no baseline)")
+              f"{run[key][METRIC]:.3f} {METRIC} (no baseline)")
+    for field, n_checked in quality_checks.items():
+        # a requested field that never matched is a typo or lost coverage
+        if n_checked == 0:
+            failures.append(f"quality field {field!r}: 0 rows compared")
+        else:
+            print(f"QUALITY   {field}: checked {n_checked} rows "
+                  f"(gate x{args.quality_factor})")
 
     if args.min_speedup is not None:
         with open(args.run_json) as f:
             meta = json.load(f).get("meta", {})
-        sp = meta.get("speedup_E32k_p512")
+        sp = meta.get(args.speedup_key)
         if sp is None or sp < args.min_speedup:
             failures.append(
-                f"fast-vs-reference speedup {sp} < {args.min_speedup}")
+                f"fast-vs-reference {args.speedup_key} {sp} "
+                f"< {args.min_speedup}")
         else:
-            print(f"OK        speedup_E32k_p512 = {sp}x "
+            print(f"OK        {args.speedup_key} = {sp}x "
                   f"(gate {args.min_speedup}x)")
 
     if failures:

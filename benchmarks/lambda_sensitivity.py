@@ -2,8 +2,6 @@
 The W-* variants (no bound) are the asymptote; the paper recommends λ=1."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import run_pipeline
 
 from .common import emit, graphs, timed

@@ -1,0 +1,76 @@
+"""Mapping/simulator pipeline scaling: the Fig. 1 path *after* the cut.
+
+Times the array-native map-and-score stage — `cluster_interaction_graphs`
+(replica-CSR segment ops) + `memory_centric_mapping` (masked-argmin
+placement) + `simulate` (CSR replica-sync triples) — against the
+reference oracle loops on a power-law graph at the paper's cluster
+scales, p in {8, 64, 256, 1024}.  The partition itself is computed once
+per p with the fast engine and shared by both backends, so the rows
+isolate the mapping/simulator layer this suite gates.
+
+Rows carry both throughput (`us_per_cluster`) and the pipeline's quality
+outputs (`exec_time`, `data_comm_bytes` — Tables 6-9 quantities), so the
+CI gate catches algorithmic regressions as well as slowdowns.  Emits the
+usual CSV rows plus machine-readable `BENCH_mapping_pipeline.json`
+(see benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+from repro.core import (Machine, cluster_interaction_graphs,
+                        memory_centric_mapping, simulate,
+                        synthesize_powerlaw_graph, vertex_bytes_model,
+                        vertex_cut)
+
+from .common import emit, timed_best, write_bench_json
+
+N = 100_000              # >=170k edges at alpha=2.2
+PS = (8, 64, 256, 1024)
+REPEATS = 5
+
+
+def _map_and_score(g, cut, vb, machine, backend):
+    comm, shared = cluster_interaction_graphs(cut, cut.p, vb,
+                                              backend=backend)
+    mapping = memory_centric_mapping(comm, shared, machine, backend=backend)
+    return simulate(g, cut, mapping, backend=backend)
+
+
+def run() -> list[dict]:
+    g = synthesize_powerlaw_graph(n=N, alpha=2.2, seed=0)
+    vb = vertex_bytes_model(g)
+    rows = []
+    by_key = {}
+    for p in PS:
+        cut = vertex_cut(g, p, method="wb_libra")
+        machine = Machine.for_clusters(p)
+        for backend in ("fast", "reference"):
+            # reference rows double as the machine-speed calibration probe
+            # in check_regression.py — keep them best-of-2
+            rep, us = timed_best(_map_and_score, g, cut, vb, machine,
+                                 backend,
+                                 repeats=REPEATS if backend == "fast" else 2)
+            per_cluster = us / p
+            row = {"n": N, "edges": g.num_edges, "p": p, "backend": backend,
+                   "us_per_cluster": round(per_cluster, 3),
+                   "us_total": round(us, 1),
+                   "exec_time": rep.exec_time,
+                   "data_comm_bytes": rep.data_comm_bytes}
+            rows.append(row)
+            by_key[(p, backend)] = row
+            emit(f"mapping_pipeline/p{p}/{backend}", us,
+                 f"us_per_cluster={per_cluster:.2f}")
+
+    # headline ratio at the paper's extreme scale (p=1024 planning)
+    fast = by_key[(1024, "fast")]
+    ref = by_key[(1024, "reference")]
+    speedup = ref["us_total"] / max(fast["us_total"], 1e-9)
+    emit("mapping_pipeline/speedup_p1024", fast["us_total"],
+         f"fast_vs_reference={speedup:.1f}x")
+
+    write_bench_json("mapping_pipeline", rows,
+                     meta={"speedup_p1024": round(speedup, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,7 @@ import argparse
 import json
 import os
 
-from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_record, model_flops
+from .roofline import ICI_BW, analyze_record
 
 HBM_PER_CHIP = 16e9
 
@@ -62,8 +62,6 @@ def repro_summary(path: str) -> str:
           "wb_libra" in l]
     if sp:
         import re
-        vals = [float(re.search(r"speedup_vs_compnet=([\d.]+)x", l).group(1))
-                for l in sp if "speedup_vs_compnet" in l]
         by_p: dict = {}
         for l in sp:
             m = re.search(r"/p(\d+)/", l)

@@ -18,12 +18,15 @@ import time
 
 from . import (cluster_sweep, data_comm, edge_imbalance, edge_order_ablation,
                exec_and_comm, execution_time, expert_placement,
-               lambda_sensitivity, partitioner_scaling, replication_factor,
-               roofline)
+               lambda_sensitivity, mapping_pipeline, partitioner_scaling,
+               replication_factor, roofline)
 from .common import write_bench_json
 
 # suites that write their own BENCH_*.json with extra metadata
-SELF_WRITING = {"partitioner_scaling"}
+SELF_WRITING = {"partitioner_scaling", "mapping_pipeline"}
+# opt-in suites skipped by a default (no --only) run: their rows are a
+# re-sweep of exec_and_comm's combined pass
+OPT_IN = {"execution_time", "data_comm"}
 
 SUITES = {
     "replication_factor": lambda a: replication_factor.run(
@@ -32,9 +35,16 @@ SUITES = {
         scale=a.scale, names=a.names),            # paper Table 5
     "exec_and_comm": lambda a: exec_and_comm.run(
         scale=a.scale, names=a.names),  # paper Tables 6-9 in one pass
+    # the split Table 6-7 / 8-9 suites repeat exec_and_comm's sweep, so
+    # they are opt-in (--only) rather than part of the default run
+    "execution_time": lambda a: execution_time.run(
+        scale=a.scale, names=a.names),            # paper Tables 6-7
+    "data_comm": lambda a: data_comm.run(
+        scale=a.scale, names=a.names),            # paper Tables 8-9
     "lambda_sensitivity": lambda a: lambda_sensitivity.run(
         scale=a.scale, names=a.names),            # paper Fig. 11
     "partitioner_scaling": lambda a: partitioner_scaling.run(),  # §4.4
+    "mapping_pipeline": lambda a: mapping_pipeline.run(),  # §5-§6 fast path
     "edge_order_ablation": lambda a: edge_order_ablation.run(
         scale=a.scale, names=a.names),            # DESIGN §2 finding
     "cluster_sweep": lambda a: cluster_sweep.run(
@@ -63,7 +73,7 @@ def main() -> None:
                  f"choose from {sorted(SUITES)}")
     print("name,us_per_call,derived")
     for name, fn in SUITES.items():
-        if only and name not in only:
+        if (only and name not in only) or (not only and name in OPT_IN):
             continue
         t0 = time.time()
         try:

@@ -16,8 +16,9 @@ from .powerlaw import (expected_replication_random,
 from .vertex_cut import (ALGORITHMS, BACKENDS, VertexCutResult,
                          resolve_backend, vertex_cut)
 from .edge_cut import EDGE_CUT_METHODS, EdgeCutResult, edge_cut
-from .mapping import (Machine, MappingResult, cluster_interaction_graphs,
-                      memory_centric_mapping, round_robin_mapping)
+from .mapping import (MAPPING_BACKENDS, Machine, MappingResult,
+                      cluster_interaction_graphs, memory_centric_mapping,
+                      resolve_mapping_backend, round_robin_mapping)
 from .simulator import SimReport, run_pipeline, simulate, vertex_bytes_model
 from .benchgraphs import BENCHMARKS, Tracer, all_benchmark_names, build_graph
 
@@ -27,6 +28,7 @@ __all__ = [
     "edge_cut", "EdgeCutResult", "EDGE_CUT_METHODS",
     "Machine", "MappingResult", "memory_centric_mapping",
     "round_robin_mapping", "cluster_interaction_graphs",
+    "MAPPING_BACKENDS", "resolve_mapping_backend",
     "SimReport", "simulate", "run_pipeline", "vertex_bytes_model",
     "BENCHMARKS", "Tracer", "all_benchmark_names", "build_graph",
     "expected_replication_random", "expected_replication_random_empirical",

@@ -1,14 +1,16 @@
 """Shared vectorized edge-array helpers for the partitioners.
 
-Used by `graph.IRGraph.csr`, the METIS-like coarsener in `edge_cut`, and
-the vectorized `_finalize` of `vertex_cut` — one implementation of the
-sort-based grouping primitives instead of three hand-rolled loops.
+Used by `graph.IRGraph.csr`, the METIS-like coarsener in `edge_cut`, the
+vectorized `_finalize` of `vertex_cut`, and the array-native
+mapping/simulator fast paths — one implementation of the sort-based
+grouping and segment primitives instead of several hand-rolled loops.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["csr_adjacency", "dedup_edges", "replica_csr"]
+__all__ = ["csr_adjacency", "dedup_edges", "replica_csr",
+           "segment_entries", "interaction_from_csr", "star_triples"]
 
 
 def csr_adjacency(n: int, src: np.ndarray, dst: np.ndarray
@@ -53,3 +55,91 @@ def replica_csr(n: int, p: int, src: np.ndarray, dst: np.ndarray,
     key = np.unique(v * p + c)
     indptr = np.searchsorted(key, np.arange(n + 1, dtype=np.int64) * p)
     return indptr.astype(np.int64), (key % p).astype(np.int32)
+
+
+# ---------------------------------------------------------------------- #
+# segment primitives over a replica CSR (indptr, members)
+# ---------------------------------------------------------------------- #
+def segment_entries(indptr: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-entry segment bookkeeping for a CSR.
+
+    Returns (seg_id, first_pos, sizes): for every flat entry its segment
+    (vertex) id and the flat position of that segment's first entry, plus
+    the per-segment sizes.  `first_pos[i] == i` marks segment heads.
+    """
+    sizes = np.diff(indptr)
+    seg_id = np.repeat(np.arange(len(sizes), dtype=np.int64), sizes)
+    return seg_id, indptr[seg_id], sizes
+
+
+def star_triples(indptr: np.ndarray, members: np.ndarray,
+                 vertex_bytes: np.ndarray | None = None
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(owner, replica, bytes) triples of the replica-sync star pattern.
+
+    The owner of a vertex is the lowest cluster id in A(v) (members are
+    sorted per vertex); every other member receives one synchronisation
+    message of `vertex_bytes[v]` bytes.  Triples come out grouped by
+    vertex in member order — the exact order the reference loops emit.
+    """
+    seg_id, first_pos, _ = segment_entries(indptr)
+    non_owner = np.arange(len(members), dtype=np.int64) != first_pos
+    owners = members[first_pos[non_owner]]
+    replicas = members[non_owner]
+    if vertex_bytes is None:
+        b = np.ones(len(replicas))
+    else:
+        b = np.asarray(vertex_bytes, dtype=np.float64)[seg_id[non_owner]]
+    return owners, replicas, b
+
+
+def interaction_from_csr(indptr: np.ndarray, members: np.ndarray, p: int,
+                         vertex_bytes: np.ndarray | None = None,
+                         pairwise_cap: int = 64
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized (comm[P,P], shared[P,P]) from a replica CSR.
+
+    Same semantics as the reference loop in
+    `mapping.cluster_interaction_graphs`: star-shaped owner->replica comm,
+    diagonal reference counts, and capped pairwise shared counts (vertices
+    replicated to more than `pairwise_cap` clusters skip the O(|A|^2)
+    pairs but keep their star traffic).
+    """
+    comm = np.zeros((p, p))
+    shared = np.zeros((p, p))
+    if len(members) == 0:
+        return comm, shared
+    mem = members.astype(np.int64)
+    # diagonal: vertices referencing each cluster (members unique per seg)
+    diag = np.bincount(mem, minlength=p).astype(np.float64)
+    shared.flat[:: p + 1] = diag
+
+    # star comm as a sparse flat scatter of unique (owner, replica) keys —
+    # the interaction pattern is sparse, so never materialise O(p^2)
+    # temporaries (a dense bincount/transpose costs more than the whole
+    # mapping at p >= 1024)
+    owners, replicas, b = star_triples(indptr, members, vertex_bytes)
+    if len(owners):
+        key = owners.astype(np.int64) * p + replicas
+        uq, inv = np.unique(key, return_inverse=True)
+        sums = np.bincount(inv, weights=b)
+        comm.flat[uq] += sums            # owner != replica: off-diagonal
+        comm.flat[(uq % p) * p + uq // p] += sums
+
+    sizes = np.diff(indptr)
+    keys = []
+    for s in np.unique(sizes):
+        s = int(s)
+        if s < 2 or s > pairwise_cap:
+            continue
+        base = indptr[:-1][sizes == s]
+        iu, ju = np.triu_indices(s, k=1)
+        x = mem[(base[:, None] + iu[None, :]).ravel()]
+        y = mem[(base[:, None] + ju[None, :]).ravel()]
+        keys.append(x * p + y)           # members sorted, so x < y always
+    if keys:
+        uq, cnt = np.unique(np.concatenate(keys), return_counts=True)
+        shared.flat[uq] += cnt
+        shared.flat[(uq % p) * p + uq // p] += cnt
+    return comm, shared

@@ -9,7 +9,23 @@ factors of Fig. 7 drive the greedy decisions:
              capped by a per-core cluster threshold (=4 in the paper);
   factor 2 — communicating clusters -> adjacent cores (short XY routes);
   factor 3 — independent clusters  -> different mesh regions
-             (architecture decomposition spreads traffic).
+             (architecture decomposition spreads traffic), avoiding the
+             region of the cluster's strongest (weak) interaction peer.
+
+Like `vertex_cut`, the layer runs on one of two engines selected with
+`backend=`:
+
+  reference — the original per-cluster Python scans over every core and
+              the per-vertex replica-set loop of
+              `cluster_interaction_graphs`; kept as the readable oracle.
+  fast      — array-native (the default): interaction graphs are
+              vectorized segment ops over the replica CSR
+              (`_arrayops.interaction_from_csr`), and the greedy
+              placement replaces its `for c in range(n_cores)` candidate
+              scans with precomputed hop-distance/region arrays and
+              masked argmin selection.  Bit-identical `core_of` to the
+              reference: same greedy order, same (occupancy, hops)
+              lexicographic keys, same lowest-index tie-breaking.
 
 The same `Machine` abstraction doubles as the TPU-pod ICI mesh in
 `launch/mesh.py`, where "cores" are chips and "NUMA regions" are pods.
@@ -20,8 +36,27 @@ import dataclasses
 
 import numpy as np
 
+from ._arrayops import interaction_from_csr
+from .vertex_cut import BACKENDS as _PARTITIONER_BACKENDS
+
 __all__ = ["Machine", "MappingResult", "memory_centric_mapping",
-           "cluster_interaction_graphs"]
+           "cluster_interaction_graphs", "round_robin_mapping",
+           "MAPPING_BACKENDS", "resolve_mapping_backend"]
+
+MAPPING_BACKENDS = ("fast", "reference")
+
+
+def resolve_mapping_backend(backend: str) -> str:
+    """Map a pipeline-level backend choice onto a mapping/sim engine.
+
+    The partitioner distinguishes "native"/"python" fast engines; the
+    mapping and simulator layers only have one fast path, so anything
+    that is not the reference oracle runs on it.
+    """
+    if backend not in _PARTITIONER_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {_PARTITIONER_BACKENDS}")
+    return "reference" if backend == "reference" else "fast"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,12 +89,40 @@ class Machine:
         rb, cb = self.coords(b)
         return abs(ra - rb) + abs(ca - cb)
 
+    def region_grid(self) -> tuple[int, int]:
+        """(row_bands, col_bands) with row_bands·col_bands == n_regions.
+
+        The factor pair closest to square (largest divisor <= sqrt), with
+        the longer band axis along the longer mesh axis so every region
+        id is realisable whenever the mesh has enough rows/cols — a
+        non-perfect-square n_regions (6, 5, ...) must not silently drop
+        regions.
+        """
+        n = max(1, self.n_regions)
+        small = max(d for d in range(1, int(np.sqrt(n)) + 1) if n % d == 0)
+        big = n // small
+        return (big, small) if self.rows >= self.cols else (small, big)
+
     def region_of(self, core: int) -> int:
         """Grid-style architecture decomposition (factor 3)."""
         r, c = self.coords(core)
-        rr = max(1, int(np.sqrt(self.n_regions)))
-        cc = max(1, self.n_regions // rr)
-        return (r * rr // self.rows) * cc + (c * cc // self.cols)
+        rb, cb = self.region_grid()
+        return (r * rb // self.rows) * cb + (c * cb // self.cols)
+
+    # -- vectorized views (the fast mapping backend's precomputation) --- #
+    def hop_matrix(self) -> np.ndarray:
+        """int64[n_cores, n_cores] all-pairs XY hop counts."""
+        ids = np.arange(self.n_cores, dtype=np.int64)
+        r, c = np.divmod(ids, self.cols)
+        return (np.abs(r[:, None] - r[None, :])
+                + np.abs(c[:, None] - c[None, :]))
+
+    def region_array(self) -> np.ndarray:
+        """int64[n_cores] region id per core (vectorized `region_of`)."""
+        ids = np.arange(self.n_cores, dtype=np.int64)
+        r, c = np.divmod(ids, self.cols)
+        rb, cb = self.region_grid()
+        return (r * rb // self.rows) * cb + (c * cb // self.cols)
 
     @classmethod
     def for_clusters(cls, p: int, max_cores: int = 64, **kw) -> "Machine":
@@ -94,9 +157,29 @@ class MappingResult:
 # ---------------------------------------------------------------------- #
 # interaction graphs from a vertex cut result
 # ---------------------------------------------------------------------- #
-def cluster_interaction_graphs(replicas: list, p: int,
+def _as_replica_csr(replicas) -> tuple[np.ndarray, np.ndarray]:
+    """Replica CSR (indptr, members) from a VertexCutResult or list[set]."""
+    csr = getattr(replicas, "replica_csr", None)
+    if csr is not None:
+        return csr()
+    sizes = np.fromiter((len(a) if a else 0 for a in replicas),
+                        dtype=np.int64, count=len(replicas))
+    indptr = np.zeros(len(replicas) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=indptr[1:])
+    flat = np.fromiter((c for a in replicas if a for c in sorted(a)),
+                       dtype=np.int32, count=int(indptr[-1]))
+    return indptr, flat
+
+
+def _as_replica_list(replicas) -> list:
+    rep = getattr(replicas, "replicas", None)
+    return rep if rep is not None else replicas
+
+
+def cluster_interaction_graphs(replicas, p: int,
                                vertex_bytes: np.ndarray | None = None,
-                               pairwise_cap: int = 64
+                               pairwise_cap: int = 64,
+                               backend: str = "fast"
                                ) -> tuple[np.ndarray, np.ndarray]:
     """Derive (comm[P,P], shared_mem[P,P]) from the replica sets A(v).
 
@@ -107,7 +190,24 @@ def cluster_interaction_graphs(replicas: list, p: int,
     clusters are effectively global data structures; their O(|A|^2) shared
     pairs are skipped (every core shares them anyway) while their star
     traffic is still counted.
+
+    `replicas` is a `VertexCutResult` (preferred — its replica CSR feeds
+    the vectorized fast path directly) or the legacy list-of-sets view.
     """
+    backend = resolve_mapping_backend(backend)
+    if backend == "fast":
+        indptr, members = _as_replica_csr(replicas)
+        return interaction_from_csr(indptr, members, p, vertex_bytes,
+                                    pairwise_cap)
+    return _interaction_reference(_as_replica_list(replicas), p,
+                                  vertex_bytes, pairwise_cap)
+
+
+def _interaction_reference(replicas: list, p: int,
+                           vertex_bytes: np.ndarray | None,
+                           pairwise_cap: int
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle: the original per-vertex loop over `set` replica sets."""
     comm = np.zeros((p, p))
     shared = np.zeros((p, p))
     for v, a in enumerate(replicas):
@@ -138,7 +238,8 @@ def cluster_interaction_graphs(replicas: list, p: int,
 def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
                            machine: Machine | None = None,
                            cluster_order: np.ndarray | None = None,
-                           colocate_min_overlap: float = 0.5
+                           colocate_min_overlap: float = 0.5,
+                           backend: str = "fast"
                            ) -> MappingResult:
     """Greedy cluster→core mapping per Algorithm 2 (O(P·k), k = peers).
 
@@ -154,16 +255,64 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
         cluster's references — `ClusterFromMem` in Algorithm 2 targets
         clusters working on the *same data structure*, not any two clusters
         that happen to share a replica of a hub vertex.
+      backend: "fast" (masked-argmin placement over precomputed hop and
+        region arrays) or "reference" (per-core Python scans, the oracle).
+        Both produce bit-identical `core_of`; the partitioner-level
+        engine names "native"/"python" resolve to "fast".
     """
+    backend = resolve_mapping_backend(backend)
     p = comm.shape[0]
     machine = machine or Machine.for_clusters(p)
-    n_cores = machine.n_cores
 
-    off_diag = shared - np.diag(np.diag(shared))
+    off_diag = shared.copy()
+    np.fill_diagonal(off_diag, 0.0)
     if cluster_order is None:
         cluster_order = np.argsort(-(comm.sum(1) + off_diag.sum(1)),
                                    kind="stable")
+    own = np.maximum(np.diagonal(shared), 1.0)
 
+    place = _place_fast if backend == "fast" else _place_reference
+    core_of = place(comm, off_diag, own, machine, cluster_order,
+                    colocate_min_overlap)
+    return MappingResult(machine=machine, core_of=core_of, p=p)
+
+
+def _select_peers(cl: int, placed: np.ndarray, comm: np.ndarray,
+                  off_diag: np.ndarray, own: np.ndarray,
+                  colocate_min_overlap: float) -> tuple[int, int]:
+    """(mem_peer, ipc_peer) for cluster `cl`; -1 when a factor is silent."""
+    mem_peer = ipc_peer = -1
+    if placed.any():
+        # factor 1: already-placed peer sharing a dominant data structure
+        srow = np.where(placed, off_diag[cl], -1.0)
+        j = int(np.argmax(srow))
+        if srow[j] > colocate_min_overlap * min(own[cl], own[j]):
+            mem_peer = j
+        # factor 2: strongest already-placed communication peer
+        crow = np.where(placed, comm[cl], -1.0)
+        j = int(np.argmax(crow))
+        if crow[j] > 0:
+            ipc_peer = j
+    return mem_peer, ipc_peer
+
+
+def _weak_peer(cl: int, placed: np.ndarray, comm: np.ndarray,
+               off_diag: np.ndarray) -> int:
+    """Strongest already-placed interaction peer by the combined signal
+    (factor 3 avoids its region); -1 if nothing placed interacts at all."""
+    if not placed.any():
+        return -1
+    irow = np.where(placed, comm[cl] + off_diag[cl], -1.0)
+    j = int(np.argmax(irow))
+    return j if irow[j] > 0 else -1
+
+
+def _place_reference(comm: np.ndarray, off_diag: np.ndarray, own: np.ndarray,
+                     machine: Machine, cluster_order: np.ndarray,
+                     colocate_min_overlap: float) -> np.ndarray:
+    """Oracle placement: per-core Python scans (the original engine)."""
+    p = comm.shape[0]
+    n_cores = machine.n_cores
     core_of = np.full(p, -1, dtype=np.int32)
     core_count = np.zeros(n_cores, dtype=np.int64)
     regions = [machine.region_of(c) for c in range(n_cores)]
@@ -200,25 +349,11 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
                 return min(cands, key=lambda c: core_count[c])
         return int(np.argmin(core_count))
 
-    own = np.maximum(np.diag(shared), 1.0)
     for cl in cluster_order:
         cl = int(cl)
         placed = core_of >= 0
-        # factor 1: already-placed peer sharing a dominant data structure
-        mem_peer = -1
-        if placed.any():
-            srow = np.where(placed, off_diag[cl], -1.0)
-            j = int(np.argmax(srow))
-            if srow[j] > colocate_min_overlap * min(own[cl], own[j]):
-                mem_peer = j
-        # factor 2: strongest already-placed communication peer
-        ipc_peer = -1
-        if placed.any():
-            crow = np.where(placed, comm[cl], -1.0)
-            j = int(np.argmax(crow))
-            if crow[j] > 0:
-                ipc_peer = j
-
+        mem_peer, ipc_peer = _select_peers(cl, placed, comm, off_diag, own,
+                                           colocate_min_overlap)
         if mem_peer >= 0:
             tgt = int(core_of[mem_peer])
             if core_count[tgt] < machine.cluster_threshold:
@@ -228,12 +363,111 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
         elif ipc_peer >= 0:
             core_of[cl] = nearby_core(int(core_of[ipc_peer]))  # factor 2
         else:
-            avoid = (machine.region_of(int(core_of[ipc_peer]))
-                     if ipc_peer >= 0 else None)
-            core_of[cl] = diff_region_core(avoid)               # factor 3
+            # factor 3: spread away from the strongest (weak) peer's region
+            peer = _weak_peer(cl, placed, comm, off_diag)
+            avoid = regions[int(core_of[peer])] if peer >= 0 else None
+            core_of[cl] = diff_region_core(avoid)
         core_count[core_of[cl]] += 1
 
-    return MappingResult(machine=machine, core_of=core_of, p=p)
+    return core_of
+
+
+def _place_fast(comm: np.ndarray, off_diag: np.ndarray, own: np.ndarray,
+                machine: Machine, cluster_order: np.ndarray,
+                colocate_min_overlap: float) -> np.ndarray:
+    """Array-native placement: masked argmin over precomputed hop/region
+    arrays.  The greedy loop over clusters is inherently sequential; every
+    per-core scan inside it is a vectorized argmin whose lowest-index
+    tie-breaking matches the reference scans exactly, and the per-cluster
+    peer selection reuses one preallocated masked buffer instead of fresh
+    np.where temporaries."""
+    p = comm.shape[0]
+    n_cores = machine.n_cores
+    thr = machine.cluster_threshold
+    hops = machine.hop_matrix()
+    regions = machine.region_array()
+    n_regions = int(regions.max()) + 1
+    # lexicographic (occupancy, hops) packed into one integer key
+    key_scale = np.int64(hops.max() + 1)
+    big = np.iinfo(np.int64).max
+
+    core_of = np.full(p, -1, dtype=np.int32)
+    core_count = np.zeros(n_cores, dtype=np.int64)
+    free = core_count < thr               # maintained incrementally
+    # occupancy part of the (occupancy, hops) key, maintained incrementally
+    count_key = core_count * key_scale
+    n_placed = 0
+    region_rr = 0
+    # multiply-masking: masked(row) = row * placed01 + (placed01 - 1)
+    # keeps placed entries (row >= 0) and maps unplaced ones to exactly
+    # -1.0, the reference oracle's np.where sentinel — three contiguous
+    # vector ops per lookup, no boolean fancy indexing
+    placed01 = np.zeros(p)
+    neg = placed01 - 1.0
+    srow = np.empty(p)
+    crow = np.empty(p)
+
+    def nearby_core(anchor: int) -> int:
+        key = np.where(free, count_key + hops[anchor], big)
+        key[anchor] = big
+        c = int(np.argmin(key))
+        return c if key[c] < big else int(np.argmin(core_count))
+
+    def diff_region_core(avoid_region: int | None) -> int:
+        nonlocal region_rr
+        for off in range(n_regions):
+            reg = (region_rr + off) % n_regions
+            if avoid_region is not None and reg == avoid_region:
+                continue
+            mask = free & (regions == reg)
+            if mask.any():
+                region_rr = (reg + 1) % n_regions
+                return int(np.argmin(np.where(mask, core_count, big)))
+        return int(np.argmin(core_count))
+
+    for cl in cluster_order:
+        cl = int(cl)
+        mem_peer = ipc_peer = -1
+        if n_placed:
+            np.multiply(off_diag[cl], placed01, out=srow)
+            srow += neg
+            np.multiply(comm[cl], placed01, out=crow)
+            crow += neg
+            j0 = int(np.argmax(srow))
+            j1 = int(np.argmax(crow))
+            # factor 1: already-placed peer sharing a dominant data structure
+            if srow[j0] > colocate_min_overlap * min(own[cl], own[j0]):
+                mem_peer = j0
+            # factor 2: strongest already-placed communication peer
+            if crow[j1] > 0:
+                ipc_peer = j1
+        if mem_peer >= 0:
+            tgt = int(core_of[mem_peer])
+            if core_count[tgt] < thr:
+                core_of[cl] = tgt           # factor 1: colocate
+            else:
+                core_of[cl] = nearby_core(tgt)
+        elif ipc_peer >= 0:
+            core_of[cl] = nearby_core(int(core_of[ipc_peer]))  # factor 2
+        else:
+            # factor 3: spread away from the strongest (weak) peer's region
+            avoid = None
+            if n_placed:
+                # masked entries sum to -2 < 0, so they never win the argmax
+                irow = srow + crow
+                j = int(np.argmax(irow))
+                if irow[j] > 0:
+                    avoid = int(regions[core_of[j]])
+            core_of[cl] = diff_region_core(avoid)
+        tgt = int(core_of[cl])
+        core_count[tgt] += 1
+        count_key[tgt] += key_scale
+        free[tgt] = core_count[tgt] < thr
+        placed01[cl] = 1.0
+        neg[cl] = 0.0
+        n_placed += 1
+
+    return core_of
 
 
 def round_robin_mapping(p: int, machine: Machine | None = None

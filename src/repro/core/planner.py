@@ -27,7 +27,7 @@ import numpy as np
 from .graph import IRGraph
 from .jaxpr_graph import trace_to_graph
 from .mapping import (Machine, cluster_interaction_graphs,
-                      memory_centric_mapping)
+                      memory_centric_mapping, resolve_mapping_backend)
 from .simulator import simulate, vertex_bytes_model
 from .vertex_cut import VertexCutResult, vertex_cut
 
@@ -58,11 +58,13 @@ def plan_graph(g: IRGraph, p: int, method: str = "wb_libra",
                lam: float = 1.0, machine: Machine | None = None,
                backend: str = "fast") -> PlanReport:
     cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
-    comm, shared = cluster_interaction_graphs(cut.replicas, p,
-                                              vertex_bytes_model(g))
+    map_backend = resolve_mapping_backend(backend)
+    comm, shared = cluster_interaction_graphs(cut, p, vertex_bytes_model(g),
+                                              backend=map_backend)
     mapping = memory_centric_mapping(comm, shared,
-                                     machine or Machine.for_clusters(p))
-    rep = simulate(g, cut, mapping)
+                                     machine or Machine.for_clusters(p),
+                                     backend=map_backend)
+    rep = simulate(g, cut, mapping, backend=map_backend)
     return PlanReport(graph=g, cut=cut, exec_time=rep.exec_time,
                       comm_bytes=rep.data_comm_bytes, p=p)
 
@@ -230,8 +232,8 @@ def naive_expert_placement(expert_load: np.ndarray,
 # ---------------------------------------------------------------------- #
 # mesh device ordering (Algorithm 2 on the ICI mesh)
 # ---------------------------------------------------------------------- #
-def mesh_device_order(shard_comm: np.ndarray, rows: int, cols: int
-                      ) -> np.ndarray:
+def mesh_device_order(shard_comm: np.ndarray, rows: int, cols: int,
+                      backend: str = "fast") -> np.ndarray:
     """Assign model shards to ICI mesh coordinates.
 
     `shard_comm[i, j]` is the traffic between logical shards i and j (e.g.
@@ -245,5 +247,6 @@ def mesh_device_order(shard_comm: np.ndarray, rows: int, cols: int
     mach = Machine(rows=rows, cols=cols,
                    cluster_threshold=max(1, int(np.ceil(p / (rows * cols)))))
     mapping = memory_centric_mapping(shard_comm, np.zeros_like(shard_comm),
-                                     mach)
+                                     mach,
+                                     backend=resolve_mapping_backend(backend))
     return mapping.core_of

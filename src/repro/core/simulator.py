@@ -19,6 +19,13 @@ cluster an analytic cost on the same machine model used by the mapper:
 
 Outputs: overall execution time (max over cores + sync) and total
 inter-core data communication, the two quantities in Tables 6–9.
+
+Like the partitioner and the mapper, the simulator runs on one of two
+engines selected with `backend=`: "fast" (default) builds the vertex-cut
+(owner, dst, bytes) replica-sync triples straight from the replica CSR
+with no Python loop (`_arrayops.star_triples`); "reference" is the
+original per-vertex loop over `set` replica sets, kept as the oracle
+(tests assert the two SimReports agree to rtol 1e-12).
 """
 from __future__ import annotations
 
@@ -27,12 +34,14 @@ import math
 
 import numpy as np
 
+from ._arrayops import star_triples
 from .graph import IRGraph
-from .mapping import Machine, MappingResult, cluster_interaction_graphs
+from .mapping import (Machine, MappingResult, cluster_interaction_graphs,
+                      resolve_mapping_backend)
 from .vertex_cut import VertexCutResult
 from .edge_cut import EdgeCutResult
 
-__all__ = ["SimReport", "simulate", "vertex_bytes_model"]
+__all__ = ["SimReport", "simulate", "run_pipeline", "vertex_bytes_model"]
 
 # -- cost constants (machine-model scale; Table 2: 2.4 GHz OoO cores) ----
 CYCLE = 1.0 / 2.4e9                   # edge weights are cycles (rdtsc units)
@@ -68,10 +77,12 @@ def vertex_bytes_model(g: IRGraph) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------- #
-def simulate(g: IRGraph, partition, mapping: MappingResult) -> SimReport:
+def simulate(g: IRGraph, partition, mapping: MappingResult,
+             backend: str = "fast") -> SimReport:
     """Execute a partition (vertex- or edge-cut) on the mapped machine."""
+    backend = resolve_mapping_backend(backend)
     if isinstance(partition, VertexCutResult):
-        return _simulate_vertex_cut(g, partition, mapping)
+        return _simulate_vertex_cut(g, partition, mapping, backend)
     if isinstance(partition, EdgeCutResult):
         return _simulate_edge_cut(g, partition, mapping)
     raise TypeError(f"unsupported partition type {type(partition)}")
@@ -101,15 +112,9 @@ def _sync_model(p: int, n_cores: int) -> tuple[float, float]:
     return sync_time, sync_bytes
 
 
-def _simulate_vertex_cut(g: IRGraph, r: VertexCutResult,
-                         mapping: MappingResult) -> SimReport:
-    mach = mapping.machine
-    cluster_t = _per_cluster_compute(g, r.assignment, r.p)
-    core_t = _core_compute(cluster_t, mapping)
-
-    vb = vertex_bytes_model(g)
-    core_wait = np.zeros(mach.n_cores)
-    # flatten (owner_core, dst_core, bytes) across all replica sets
+def _vc_triples_reference(r: VertexCutResult, vb: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Oracle: per-vertex loop flattening (owner, dst, bytes) triples."""
     owners, dsts, sizes = [], [], []
     for v, a in enumerate(r.replicas):
         if not a or len(a) < 2:
@@ -118,10 +123,28 @@ def _simulate_vertex_cut(g: IRGraph, r: VertexCutResult,
         owners.extend([members[0]] * (len(members) - 1))
         dsts.extend(members[1:])
         sizes.extend([vb[v]] * (len(members) - 1))
-    if owners:
-        oc = mapping.core_of[np.asarray(owners)].astype(np.int64)
-        dc = mapping.core_of[np.asarray(dsts)].astype(np.int64)
-        b = np.asarray(sizes)
+    return (np.asarray(owners, dtype=np.int64),
+            np.asarray(dsts, dtype=np.int64), np.asarray(sizes))
+
+
+def _simulate_vertex_cut(g: IRGraph, r: VertexCutResult,
+                         mapping: MappingResult,
+                         backend: str = "fast") -> SimReport:
+    mach = mapping.machine
+    cluster_t = _per_cluster_compute(g, r.assignment, r.p)
+    core_t = _core_compute(cluster_t, mapping)
+
+    vb = vertex_bytes_model(g)
+    core_wait = np.zeros(mach.n_cores)
+    # flatten (owner_core, dst_core, bytes) across all replica sets;
+    # the fast path reads them straight off the replica CSR
+    if backend == "fast":
+        owners, dsts, b = star_triples(*r.replica_csr(), vb)
+    else:
+        owners, dsts, b = _vc_triples_reference(r, vb)
+    if len(owners):
+        oc = mapping.core_of[owners].astype(np.int64)
+        dc = mapping.core_of[dsts].astype(np.int64)
         diff = oc != dc           # factor-1 colocation: coherence-free
         oc, dc, b = oc[diff], dc[diff], b[diff]
         hops = (np.abs(oc // mach.cols - dc // mach.cols)
@@ -168,23 +191,30 @@ def _simulate_edge_cut(g: IRGraph, r: EdgeCutResult,
 
 # ---------------------------------------------------------------------- #
 def run_pipeline(g: IRGraph, p: int, method: str, lam: float = 1.0,
-                 machine: Machine | None = None, seed: int = 0):
+                 machine: Machine | None = None, seed: int = 0,
+                 backend: str = "fast"):
     """partition -> map -> simulate, returning (partition, mapping, report).
 
     The end-to-end path of Fig. 1: structure analysis is already in `g`,
     vertex/edge cut produces clusters, the memory-centric mapping schedules
-    them, and the simulator scores the result.
+    them, and the simulator scores the result.  `backend` selects the
+    engine for every stage: the partitioner accepts any of its backends
+    ("fast"/"native"/"python"/"reference"); the mapping and simulator run
+    their reference oracle iff `backend == "reference"`.
     """
     from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
     from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut
     from .mapping import memory_centric_mapping
 
     machine = machine or Machine.for_clusters(p)
+    map_backend = resolve_mapping_backend(backend)
     if method in ALGORITHMS:
-        part = _vertex_cut(g, p, method=method, lam=lam, seed=seed)
+        part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
+                           backend=backend)
         comm, shared = cluster_interaction_graphs(
-            part.replicas, p, vertex_bytes_model(g))
-        mapping = memory_centric_mapping(comm, shared, machine)
+            part, p, vertex_bytes_model(g), backend=map_backend)
+        mapping = memory_centric_mapping(comm, shared, machine,
+                                         backend=map_backend)
     elif method in EDGE_CUT_METHODS:
         part = _edge_cut(g, p, method=method, seed=seed)
         # inter-cluster comm graph from cut edges (one line per dependency)
@@ -193,8 +223,9 @@ def run_pipeline(g: IRGraph, p: int, method: str, lam: float = 1.0,
         cross = cu != cv
         np.add.at(comm, (cu[cross], cv[cross]), CACHE_LINE)
         comm = comm + comm.T
-        mapping = memory_centric_mapping(comm, np.zeros_like(comm), machine)
+        mapping = memory_centric_mapping(comm, np.zeros_like(comm), machine,
+                                         backend=map_backend)
     else:
         raise ValueError(f"unknown method {method!r}")
-    report = simulate(g, part, mapping)
+    report = simulate(g, part, mapping, backend=map_backend)
     return part, mapping, report

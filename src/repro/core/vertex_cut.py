@@ -105,6 +105,12 @@ class VertexCutResult:
                 for v in range(self.n_vertices)]
         return self._replicas_cache
 
+    def replica_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """Replica sets as (indptr, members) — the array-native view the
+        mapping/simulator fast paths consume directly (members are sorted
+        cluster ids per vertex; the owner is the first entry)."""
+        return self.replica_indptr, self.replica_flat
+
     def replica_sizes(self) -> np.ndarray:
         """|A(v)| per vertex (0 for isolated vertices)."""
         return np.diff(self.replica_indptr)

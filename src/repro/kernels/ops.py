@@ -15,8 +15,6 @@ chunked once Sk exceeds `CHUNK_THRESHOLD`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

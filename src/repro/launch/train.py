@@ -14,7 +14,6 @@ supervisor loop that restores from the last checkpoint on a step failure.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -26,7 +25,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.configs.base import ParallelConfig
 from repro.data import DataConfig, SyntheticLM
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import StragglerDetector
 from .steps import make_train_step
 

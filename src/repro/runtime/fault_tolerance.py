@@ -21,8 +21,6 @@ import math
 import time
 from typing import Callable
 
-import numpy as np
-
 __all__ = ["StragglerDetector", "ElasticMesh", "TrainSupervisor"]
 
 

@@ -3,10 +3,8 @@ sharded lowering on a small in-process mesh, loop-aware cost analysis."""
 import subprocess
 import sys
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.analysis import analyze_hlo
 from repro.configs import ARCHS, SHAPES, reduced_config

@@ -197,7 +197,6 @@ def test_param_specs_cover_tree():
 def test_sanitize_specs_drops_nondivisible():
     from repro.parallel.sharding import sanitize_specs
     from jax.sharding import PartitionSpec as P
-    import os
     mesh = jax.make_mesh((1,), ("model",))
     spec = sanitize_specs(P("model"), jax.ShapeDtypeStruct((7,), jnp.float32),
                           mesh)
