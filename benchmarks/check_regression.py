@@ -26,7 +26,9 @@ import math
 import sys
 
 MEASURED = {"us_per_edge", "us_total", "replication_factor",
-            "us_per_cluster", "exec_time", "data_comm_bytes"}
+            "us_per_cluster", "exec_time", "data_comm_bytes",
+            "edges_per_s", "comm_bytes", "pct_of_compnet",
+            "speedup_vs_compnet"}
 
 
 def _key(row: dict) -> tuple:

@@ -51,21 +51,21 @@ def roofline_table(path: str) -> str:
 def repro_summary(path: str) -> str:
     if not os.path.exists(path):
         return "(paper-scale benchmark output not found)"
-    rows = [l.strip() for l in open(path) if "," in l]
+    rows = [ln.strip() for ln in open(path) if "," in ln]
     out = []
-    ub = [l for l in rows if "under_bound=" in l]
+    ub = [ln for ln in rows if "under_bound=" in ln]
     if ub:
-        good = sum(1 for l in ub if "under_bound=True" in l)
+        good = sum(1 for ln in ub if "under_bound=True" in ln)
         out.append(f"- Fig. 8 replication factor: {good}/{len(ub)} "
                    "greedy results under the Eq. (10) bound.")
-    sp = [l for l in rows if l.startswith("execution_time/") and
-          "wb_libra" in l]
+    sp = [ln for ln in rows if ln.startswith("execution_time/") and
+          "wb_libra" in ln]
     if sp:
         import re
         by_p: dict = {}
-        for l in sp:
-            m = re.search(r"/p(\d+)/", l)
-            v = re.search(r"speedup_vs_compnet=([\d.]+)x", l)
+        for ln in sp:
+            m = re.search(r"/p(\d+)/", ln)
+            v = re.search(r"speedup_vs_compnet=([\d.]+)x", ln)
             if m and v:
                 by_p.setdefault(int(m.group(1)), []).append(
                     float(v.group(1)))
@@ -75,13 +75,13 @@ def repro_summary(path: str) -> str:
                        f"mean {sum(vs)/len(vs):.2f}x "
                        f"(range {min(vs):.2f}-{max(vs):.2f}x) "
                        f"over {len(vs)} graphs.")
-    dc = [l for l in rows if l.startswith("data_comm/") and
-          ("wb_libra" in l or "/metis" in l)]
+    dc = [ln for ln in rows if ln.startswith("data_comm/") and
+          ("wb_libra" in ln or "/metis" in ln)]
     if dc:
         import re
         for meth in ("wb_libra", "metis"):
-            vs = [float(re.search(r"pct_of_compnet=([\d.]+)%", l).group(1))
-                  for l in dc if f"/{meth}" in l and "pct_of_compnet" in l]
+            vs = [float(re.search(r"pct_of_compnet=([\d.]+)%", ln).group(1))
+                  for ln in dc if f"/{meth}" in ln and "pct_of_compnet" in ln]
             if vs:
                 out.append(f"- {meth} data communication vs CompNet=100%: "
                            f"mean {sum(vs)/len(vs):.0f}% over {len(vs)} "

@@ -1,0 +1,131 @@
+"""Trace-ingestion front end: parse throughput + downstream cut quality.
+
+Streams synthetic TRACE_SCHEMA v0 NDJSON (>=1M lines at the headline
+point) through `repro.trace.ingest_trace` and reports edges/second, then
+partitions the ingested graph with WB-Libra and reports the replication
+factor — so a regression in either the parser or the graph it builds
+fails CI (`benchmarks/baselines/trace_ingest.json`).
+
+The `reference` backend is a deliberately naive ingester (materialise
+every record dict, single unchunked pass) kept both as the readable
+oracle — the bench asserts graph equality against the streaming engine —
+and as the host-speed calibration probe for `check_regression.py`.
+Streaming-mode discipline is asserted outright: the peak Python edge
+buffer must stay bounded by the chunk size, not the trace length.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import vertex_cut
+from repro.core.graph import IRGraph
+from repro.trace import (ingest_trace_with_stats, resolve_weight_model,
+                         synthesize_trace, type_bytes)
+
+from .common import emit, timed, write_bench_json
+
+CACHE_DIR = ".cache/traces"
+SMALL_LINES = 100_000
+BIG_LINES = 1_000_000
+CHUNK_EDGES = 1 << 16
+CUT_P = 64
+
+
+def reference_ingest(path: str, weight_model: str = "bytes") -> IRGraph:
+    """Naive oracle: all records as dicts, one unchunked pass."""
+    weight_fn = resolve_weight_model(weight_model)
+    with open(path, "r", encoding="utf-8") as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    defs: dict = {}
+    src, dst, w, n = [], [], [], 0
+    for rec in records:
+        if "kind" in rec:
+            continue
+        fn = rec.get("fn", "?")
+        nid = n
+        n += 1
+        use_tys = rec.get("use_tys")
+        for i, u in enumerate(rec.get("uses", [])):
+            if (fn, u) in defs:
+                pid, pbytes = defs[(fn, u)]
+            elif u.startswith("const:"):
+                pid, pbytes, n = n, None, n + 1
+            else:
+                pid, pbytes, n = n, None, n + 1
+                defs[(fn, u)] = (pid, None)
+            src.append(pid)
+            dst.append(nid)
+            w.append(weight_fn(rec["op"],
+                               use_tys[i] if use_tys is not None else None,
+                               pbytes))
+        if rec.get("def") is not None:
+            ty = rec.get("def_ty")
+            defs[(fn, rec["def"])] = (
+                nid, type_bytes(ty) if isinstance(ty, str) else None)
+    return IRGraph(n=n, src=np.asarray(src, np.int32),
+                   dst=np.asarray(dst, np.int32),
+                   w=np.asarray(w, np.float64), name="reference")
+
+
+def _trace_path(lines: int) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"synth_{lines}_seed0.ndjson")
+    if not os.path.exists(path):
+        synthesize_trace(path, lines, seed=0)
+    return path
+
+
+def _row(lines: int, model: str, backend: str, with_quality: bool) -> dict:
+    path = _trace_path(lines)
+    if backend == "fast":
+        (g, stats), us = timed(ingest_trace_with_stats, path,
+                               weight_model=model, chunk_edges=CHUNK_EDGES)
+        # streaming discipline: buffer bounded by chunk, not trace size
+        assert stats.peak_chunk_edges <= CHUNK_EDGES + 8, \
+            f"edge buffer {stats.peak_chunk_edges} exceeds chunk bound"
+    else:
+        g, us = timed(reference_ingest, path, model)
+    row = {"lines": lines, "model": model, "backend": backend,
+           "edges": g.num_edges,
+           "us_per_edge": round(us / max(g.num_edges, 1), 4),
+           "us_total": round(us, 1),
+           "edges_per_s": round(g.num_edges / (us / 1e6), 1)}
+    if with_quality:
+        cut = vertex_cut(g, CUT_P, method="wb_libra", backend="fast")
+        row["replication_factor"] = round(cut.replication_factor, 4)
+    emit(f"trace_ingest/L{lines}/{model}/{backend}", us,
+         f"edges_per_s={row['edges_per_s']:.0f}")
+    return row, g
+
+
+def run() -> list[dict]:
+    rows = []
+    small, g_fast = _row(SMALL_LINES, "bytes", "fast", with_quality=True)
+    rows.append(small)
+    ref, g_ref = _row(SMALL_LINES, "bytes", "reference", with_quality=False)
+    rows.append(ref)
+    # the naive oracle must agree with the streaming engine bit-for-bit
+    assert g_fast.n == g_ref.n, (g_fast.n, g_ref.n)
+    assert np.array_equal(g_fast.src, g_ref.src)
+    assert np.array_equal(g_fast.dst, g_ref.dst)
+    assert np.array_equal(g_fast.w, g_ref.w)
+    rows.append(_row(SMALL_LINES, "memop-latency", "fast",
+                     with_quality=False)[0])
+    big, _ = _row(BIG_LINES, "bytes", "fast", with_quality=True)
+    rows.append(big)
+
+    speedup = ref["us_per_edge"] / max(small["us_per_edge"], 1e-9)
+    emit("trace_ingest/speedup_L100k", small["us_total"],
+         f"fast_vs_reference={speedup:.2f}x")
+    write_bench_json("trace_ingest", rows,
+                     meta={"chunk_edges": CHUNK_EDGES, "cut_p": CUT_P,
+                           "edges_per_s_1M": big["edges_per_s"],
+                           "speedup_L100k": round(speedup, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -19,7 +19,8 @@ from .edge_cut import EDGE_CUT_METHODS, EdgeCutResult, edge_cut
 from .mapping import (MAPPING_BACKENDS, Machine, MappingResult,
                       cluster_interaction_graphs, memory_centric_mapping,
                       resolve_mapping_backend, round_robin_mapping)
-from .simulator import SimReport, run_pipeline, simulate, vertex_bytes_model
+from .simulator import (SimReport, coerce_graph, run_pipeline, simulate,
+                        vertex_bytes_model)
 from .benchgraphs import BENCHMARKS, Tracer, all_benchmark_names, build_graph
 
 __all__ = [
@@ -30,6 +31,7 @@ __all__ = [
     "round_robin_mapping", "cluster_interaction_graphs",
     "MAPPING_BACKENDS", "resolve_mapping_backend",
     "SimReport", "simulate", "run_pipeline", "vertex_bytes_model",
+    "coerce_graph",
     "BENCHMARKS", "Tracer", "all_benchmark_names", "build_graph",
     "expected_replication_random", "expected_replication_random_empirical",
     "synthesize_powerlaw_graph", "zipf_degrees",

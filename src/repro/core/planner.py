@@ -28,7 +28,7 @@ from .graph import IRGraph
 from .jaxpr_graph import trace_to_graph
 from .mapping import (Machine, cluster_interaction_graphs,
                       memory_centric_mapping, resolve_mapping_backend)
-from .simulator import simulate, vertex_bytes_model
+from .simulator import coerce_graph, simulate, vertex_bytes_model
 from .vertex_cut import VertexCutResult, vertex_cut
 
 __all__ = ["PlanReport", "plan_graph", "plan_step", "optimal_parallelism",
@@ -54,9 +54,12 @@ class PlanReport:
         }
 
 
-def plan_graph(g: IRGraph, p: int, method: str = "wb_libra",
+def plan_graph(g, p: int, method: str = "wb_libra",
                lam: float = 1.0, machine: Machine | None = None,
                backend: str = "fast") -> PlanReport:
+    """Plan `g` — an `IRGraph`, or a path to an `.npz` snapshot / NDJSON
+    dynamic trace (the `repro.trace` front end)."""
+    g = coerce_graph(g)
     cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
     map_backend = resolve_mapping_backend(backend)
     comm, shared = cluster_interaction_graphs(cut, p, vertex_bytes_model(g),

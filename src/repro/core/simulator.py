@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
 import numpy as np
 
@@ -41,7 +42,8 @@ from .mapping import (Machine, MappingResult, cluster_interaction_graphs,
 from .vertex_cut import VertexCutResult
 from .edge_cut import EdgeCutResult
 
-__all__ = ["SimReport", "simulate", "run_pipeline", "vertex_bytes_model"]
+__all__ = ["SimReport", "simulate", "run_pipeline", "vertex_bytes_model",
+           "coerce_graph"]
 
 # -- cost constants (machine-model scale; Table 2: 2.4 GHz OoO cores) ----
 CYCLE = 1.0 / 2.4e9                   # edge weights are cycles (rdtsc units)
@@ -190,21 +192,35 @@ def _simulate_edge_cut(g: IRGraph, r: EdgeCutResult,
 
 
 # ---------------------------------------------------------------------- #
-def run_pipeline(g: IRGraph, p: int, method: str, lam: float = 1.0,
+def coerce_graph(g) -> IRGraph:
+    """Accept an `IRGraph` or a path to one (.npz snapshot or an NDJSON
+    dynamic trace — see `repro.trace`); the whole pipeline takes either."""
+    if isinstance(g, IRGraph):
+        return g
+    if isinstance(g, (str, os.PathLike)):
+        from ..trace import load_graph
+        return load_graph(g)
+    raise TypeError(f"expected IRGraph or path, got {type(g).__name__}")
+
+
+def run_pipeline(g, p: int, method: str, lam: float = 1.0,
                  machine: Machine | None = None, seed: int = 0,
                  backend: str = "fast"):
     """partition -> map -> simulate, returning (partition, mapping, report).
 
-    The end-to-end path of Fig. 1: structure analysis is already in `g`,
-    vertex/edge cut produces clusters, the memory-centric mapping schedules
-    them, and the simulator scores the result.  `backend` selects the
-    engine for every stage: the partitioner accepts any of its backends
-    ("fast"/"native"/"python"/"reference"); the mapping and simulator run
-    their reference oracle iff `backend == "reference"`.
+    The end-to-end path of Fig. 1: structure analysis is already in `g`
+    (an `IRGraph`, or a path to an `.npz` snapshot / NDJSON dynamic
+    trace), vertex/edge cut produces clusters, the memory-centric mapping
+    schedules them, and the simulator scores the result.  `backend`
+    selects the engine for every stage: the partitioner accepts any of
+    its backends ("fast"/"native"/"python"/"reference"); the mapping and
+    simulator run their reference oracle iff `backend == "reference"`.
     """
     from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
     from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut
     from .mapping import memory_centric_mapping
+
+    g = coerce_graph(g)
 
     machine = machine or Machine.for_clusters(p)
     map_backend = resolve_mapping_backend(backend)

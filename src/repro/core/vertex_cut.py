@@ -263,8 +263,8 @@ def _stream_reference(n: int, p: int, src_a: np.ndarray, dst_a: np.ndarray,
 
     def least_global() -> int:
         while True:
-            l, c = heap[0]
-            if loads[c] == l:
+            ld, c = heap[0]
+            if loads[c] == ld:
                 return c
             heapq.heappop(heap)
 
@@ -481,8 +481,8 @@ def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
 
     def least_global() -> int:
         while True:
-            l, c = heap[0]
-            if loads[c] == l:
+            ld, c = heap[0]
+            if loads[c] == ld:
                 return c
             heapreplace(heap, (loads[c], c))
 

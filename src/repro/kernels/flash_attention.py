@@ -81,8 +81,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == nk - 1)
     def _done():
-        l = l_scr[...]
-        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        lsum = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(lsum == 0.0, 1.0, lsum)
                        ).astype(o_ref.dtype)
 
 

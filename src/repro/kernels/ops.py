@@ -57,7 +57,7 @@ def _attention_chunked(q, k, v, *, causal, window, softcap, scale,
     q_pos = jnp.arange(Sq) + q_offset
 
     def step(carry, blk):
-        m, l, acc, bi = carry
+        m, lsum, acc, bi = carry
         kblk, vblk = blk                              # [B, bk, Hkv, D]
         kblk = jnp.repeat(kblk.astype(jnp.float32), groups, axis=2)
         vblk = jnp.repeat(vblk.astype(jnp.float32), groups, axis=2)
@@ -76,17 +76,17 @@ def _attention_chunked(q, k, v, *, causal, window, softcap, scale,
         m_new = jnp.maximum(m, s.max(-1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
-        l = alpha * l + p.sum(-1, keepdims=True)
+        lsum = alpha * lsum + p.sum(-1, keepdims=True)
         acc = acc * alpha.swapaxes(1, 2) + jnp.einsum(
             "bhqk,bkhd->bqhd", p, vblk)
-        return (m_new, l, acc, bi + 1), None
+        return (m_new, lsum, acc, bi + 1), None
 
     m0 = jnp.full((B, Hq, Sq, 1), -1e30, jnp.float32)
     l0 = jnp.zeros((B, Hq, Sq, 1), jnp.float32)
     acc0 = jnp.zeros((B, Sq, Hq, Dv), jnp.float32)
-    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb))
-    l = jnp.where(l == 0.0, 1.0, l).swapaxes(1, 2)    # [B, Sq, Hq, 1]
-    return (acc / l).astype(q.dtype)
+    (m, lsum, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb))
+    lsum = jnp.where(lsum == 0.0, 1.0, lsum).swapaxes(1, 2)  # [B, Sq, Hq, 1]
+    return (acc / lsum).astype(q.dtype)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -16,13 +16,13 @@ slice.  Results (per cell: bytes/device, HLO FLOPs, collective bytes by
 op) are appended to a JSON file consumed by benchmarks/roofline.py and
 EXPERIMENTS.md.
 """
-import argparse
-import gzip
-import json
-import re
-import sys
-import time
-import traceback
+import argparse  # noqa: E402  (XLA_FLAGS must be set before anything else)
+import gzip      # noqa: E402
+import json      # noqa: E402
+import re        # noqa: E402
+import sys       # noqa: E402
+import time      # noqa: E402
+import traceback  # noqa: E402
 
 
 def collective_bytes(hlo_text: str) -> dict:

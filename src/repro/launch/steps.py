@@ -44,9 +44,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
             micro = batch
 
             def accum(acc, mb):
-                l, g = jax.value_and_grad(single_loss)(params, mb)
+                loss, g = jax.value_and_grad(single_loss)(params, mb)
                 acc_l, acc_g = acc
-                return (acc_l + l,
+                return (acc_l + loss,
                         jax.tree.map(
                             lambda a, b: (a + b.astype(accum_dtype)),
                             acc_g, g)), None

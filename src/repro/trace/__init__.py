@@ -1,0 +1,32 @@
+"""Dynamic-trace ingestion front end (NDJSON traces -> streaming IRGraphs).
+
+The paper's pipeline starts from instrumented dynamic LLVM traces (§3:
+basic-block execution order + per-memory-op timing).  This package is
+that front end for the reproduction: it adopts the ct-publicness NDJSON
+TRACE/CFG schemas (v0) as the interchange format, streams million-line
+traces into `IRGraph`s with constant per-chunk memory (`ingest.py`),
+replays static listings along CFG paths (`replay_trace`), derives edge
+weights through pluggable models (`weights.py`), and writes the same
+schema back out from jaxpr traces (`record.py`) — giving a round-trip
+oracle against `core.jaxpr_graph.jaxpr_to_graph`.
+
+CLI: ``python -m repro.trace {inspect,convert,partition,record,synth}``.
+"""
+from .schema import SCHEMA_VERSION, TraceFormatError, type_bytes
+from .weights import (WEIGHT_MODELS, register_weight_model,
+                      resolve_weight_model)
+from .ingest import (CFG, TraceStats, ingest_trace, ingest_trace_with_stats,
+                     load_cfg, load_graph, replay_trace)
+from .record import (DEMO_PROGRAMS, demo_program, record_fn, record_graph,
+                     record_jaxpr)
+from .synth import iter_synthetic_trace, synthesize_trace
+
+__all__ = [
+    "SCHEMA_VERSION", "TraceFormatError", "type_bytes",
+    "WEIGHT_MODELS", "register_weight_model", "resolve_weight_model",
+    "CFG", "TraceStats", "ingest_trace", "ingest_trace_with_stats",
+    "load_cfg", "load_graph", "replay_trace",
+    "DEMO_PROGRAMS", "demo_program", "record_fn", "record_graph",
+    "record_jaxpr",
+    "iter_synthetic_trace", "synthesize_trace",
+]

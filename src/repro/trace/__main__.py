@@ -1,0 +1,115 @@
+"""Trace tooling CLI.
+
+    python -m repro.trace inspect  examples/traces/toy_loop.ndjson
+    python -m repro.trace convert  trace.ndjson graph.npz --weight-model bytes
+    python -m repro.trace partition trace.ndjson -p 64 --method wb_libra
+    python -m repro.trace record   mlp.ndjson --program mlp
+    python -m repro.trace synth    big.ndjson --lines 1000000 --seed 0
+
+`inspect` prints ingestion stats + graph stats as JSON; `convert` writes
+an `.npz` IRGraph snapshot; `partition` runs the full partition -> map
+-> simulate pipeline on the ingested graph and prints the plan summary;
+`record` serializes a built-in JAX demo program's dynamic trace;
+`synth` writes a deterministic synthetic trace (benchmark input).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .ingest import ingest_trace_with_stats, replay_trace
+from .record import DEMO_PROGRAMS, demo_program, record_fn
+from .synth import synthesize_trace
+from .weights import WEIGHT_MODELS
+
+
+def _add_ingest_args(sp) -> None:
+    sp.add_argument("trace", help="NDJSON trace file")
+    sp.add_argument("--weight-model", default="bytes",
+                    choices=sorted(WEIGHT_MODELS))
+    sp.add_argument("--on-error", default="raise",
+                    choices=("raise", "skip"))
+    sp.add_argument("--chunk-edges", type=int, default=1 << 16)
+    sp.add_argument("--cfg", default=None,
+                    help="CFG NDJSON side file (block/edge/path records)")
+    sp.add_argument("--replay", action="store_true",
+                    help="treat the trace as a static listing and replay "
+                         "it along the CFG's path records")
+    sp.add_argument("--repeat", type=int, default=1,
+                    help="replay each path this many times")
+
+
+def _ingest(args, keep_labels: bool = False):
+    kw = dict(weight_model=args.weight_model, on_error=args.on_error,
+              chunk_edges=args.chunk_edges, keep_labels=keep_labels)
+    if args.replay:
+        if args.cfg is None:
+            sys.exit("--replay needs --cfg (path records)")
+        return replay_trace(args.trace, args.cfg, repeat=args.repeat, **kw)
+    return ingest_trace_with_stats(args.trace, cfg=args.cfg, **kw)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.trace",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("inspect", help="ingest + print stats JSON")
+    _add_ingest_args(sp)
+
+    sp = sub.add_parser("convert", help="ingest + save .npz IRGraph")
+    _add_ingest_args(sp)
+    sp.add_argument("out", help="output .npz path")
+
+    sp = sub.add_parser("partition",
+                        help="ingest + partition/map/simulate summary")
+    _add_ingest_args(sp)
+    sp.add_argument("-p", "--clusters", type=int, default=8)
+    sp.add_argument("--method", default="wb_libra")
+    sp.add_argument("--lam", type=float, default=1.0)
+    sp.add_argument("--backend", default="fast")
+
+    sp = sub.add_parser("record",
+                        help="write a JAX demo program's trace as NDJSON")
+    sp.add_argument("out", help="output .ndjson path")
+    sp.add_argument("--program", default="mlp",
+                    choices=sorted(DEMO_PROGRAMS))
+
+    sp = sub.add_parser("synth", help="write a synthetic NDJSON trace")
+    sp.add_argument("out", help="output .ndjson path")
+    sp.add_argument("--lines", type=int, default=100_000)
+    sp.add_argument("--seed", type=int, default=0)
+    sp.add_argument("--fns", type=int, default=4)
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "inspect":
+        g, stats = _ingest(args, keep_labels=False)
+        print(json.dumps({"stats": stats.summary(), "graph": g.stats()},
+                         indent=2, default=float))
+    elif args.cmd == "convert":
+        g, stats = _ingest(args)
+        g.save_npz(args.out)
+        print(f"wrote {args.out}: {g.num_vertices} vertices, "
+              f"{g.num_edges} edges ({stats.records} records)")
+    elif args.cmd == "partition":
+        from ..core.planner import plan_graph
+        g, _ = _ingest(args)
+        report = plan_graph(g, args.clusters, method=args.method,
+                            lam=args.lam, backend=args.backend)
+        print(json.dumps(report.summary(), indent=2, default=float))
+    elif args.cmd == "record":
+        fn, fargs = demo_program(args.program)
+        lines = record_fn(fn, *fargs, out=args.out, name=args.program)
+        print(f"wrote {args.out}: {lines} trace lines ({args.program})")
+    elif args.cmd == "synth":
+        lines = synthesize_trace(args.out, args.lines, seed=args.seed,
+                                 n_fns=args.fns)
+        print(f"wrote {args.out}: {lines} synthetic trace lines "
+              f"(seed {args.seed})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

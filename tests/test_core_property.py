@@ -7,8 +7,8 @@ pytest.importorskip(
     reason="property tests need the [test] extra: pip install -e .[test]")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import IRGraph, vertex_cut
-from repro.core.powerlaw import expected_replication_random_empirical
+from repro.core import IRGraph, vertex_cut  # noqa: E402
+from repro.core.powerlaw import expected_replication_random_empirical  # noqa: E402
 
 
 @st.composite

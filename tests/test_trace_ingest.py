@@ -1,0 +1,349 @@
+"""Trace ingestion: schema handling, malformed-input determinism,
+streaming invariance, CFG replay, weight models, and pipeline threading.
+
+Malformed traces must raise (with the line number) or skip *atomically*
+— a rejected record leaves no vertices, edges, or def-table entries
+behind, so the edge stream can never be corrupted by bad input.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import run_pipeline
+from repro.trace import (TraceFormatError, WEIGHT_MODELS, ingest_trace,
+                         ingest_trace_with_stats, iter_synthetic_trace,
+                         load_graph, replay_trace, type_bytes)
+
+
+def rec(**kw) -> str:
+    base = {"fn": "f", "bb": "b0", "op": "add", "def": None, "uses": []}
+    base.update(kw)
+    return json.dumps(base)
+
+
+# ---------------------------------------------------------------------- #
+# basic construction semantics
+# ---------------------------------------------------------------------- #
+def test_basic_edges_and_weights():
+    lines = [
+        rec(op="load", **{"def": "v0"}, uses=["arg0"], use_tys=["ptr"]),
+        rec(op="mul", **{"def": "v1"}, uses=["v0", "v0"],
+            use_tys=["i32", "i32"]),
+        rec(op="store", uses=["v1", "arg0"], use_tys=["<4 x float>", "ptr"]),
+    ]
+    g, st = ingest_trace_with_stats(lines, keep_labels=True)
+    # vertices: load, arg0 live-in, mul, store
+    assert g.n == 4 and g.num_edges == 5
+    assert list(g.node_labels) == ["load", "arg0", "mul", "store"]
+    assert g.src.tolist() == [1, 0, 0, 2, 1]
+    assert g.dst.tolist() == [0, 2, 2, 3, 3]
+    assert g.w.tolist() == [8.0, 4.0, 4.0, 16.0, 8.0]
+    assert st.records == 3 and st.livein_uses == 1 and st.void_defs == 1
+
+
+def test_const_uses_materialise_fresh_vertices():
+    lines = [
+        rec(op="add", **{"def": "v0"},
+            uses=["const:i32:7", "const:i32:7"], use_tys=["i32", "i32"]),
+        rec(op="add", pp=None, **{"def": "v1"}, uses=["const:i32:7", "v0"]),
+    ]
+    g, st = ingest_trace_with_stats(lines)
+    # the same const id never interns: 3 uses -> 3 fresh vertices
+    assert st.const_uses == 3 and g.n == 5
+    assert g.src.tolist() == [1, 2, 4, 0]
+
+
+def test_def_ty_fallback_and_default_weight():
+    lines = [
+        rec(op="load", **{"def": "v0"}, def_ty="i16", uses=[]),
+        rec(op="add", **{"def": "v1"}, uses=["v0", "v9"]),  # no use_tys
+    ]
+    g = ingest_trace(lines)
+    # without use_tys the weight falls back to the producer's def_ty
+    # (2 bytes for i16), then to the 8-byte default for the live-in
+    assert g.w.tolist() == [2.0, 8.0]
+
+
+def test_rolling_def_table_rebinds():
+    lines = [
+        rec(op="add", **{"def": "v0"}, uses=[]),
+        rec(op="mul", **{"def": "v0"}, uses=["v0"]),   # self-redefinition
+        rec(op="sub", **{"def": "v1"}, uses=["v0"]),
+    ]
+    g = ingest_trace(lines)
+    # mul's use binds to the OLD v0 (node 0); sub binds to mul's def
+    assert g.src.tolist() == [0, 1] and g.dst.tolist() == [1, 2]
+
+
+def test_def_tables_are_per_function():
+    lines = [
+        rec(fn="a", op="add", **{"def": "v0"}, uses=[]),
+        rec(fn="b", op="mul", **{"def": "v9"}, uses=["v0"]),
+    ]
+    g, st = ingest_trace_with_stats(lines)
+    # fn b's v0 is a live-in, NOT fn a's def
+    assert st.livein_uses == 1 and g.src.tolist() == [2]
+    assert st.functions == 2
+
+
+def test_unknown_opcodes_ingest_fine():
+    lines = [rec(op="frobnicate", **{"def": "v0"}, uses=[]),
+             rec(op="quux", uses=["v0"], use_tys=["i64"])]
+    for model in WEIGHT_MODELS:
+        g = ingest_trace(lines, weight_model=model)
+        assert g.num_edges == 1
+    assert ingest_trace(lines, weight_model="memop-latency").w.tolist() == [1.0]
+
+
+def test_memop_latency_classes():
+    lines = [rec(op="add", **{"def": "v0"}, uses=[]),
+             rec(op="load", **{"def": "v1"}, uses=["v0"]),
+             rec(op="store", uses=["v1"]),
+             rec(op="call", **{"def": "v2"}, uses=["v1"])]
+    g = ingest_trace(lines, weight_model="memop-latency")
+    assert g.w.tolist() == [200.0, 100.0, 250.0]
+
+
+# ---------------------------------------------------------------------- #
+# malformed input: raise with line numbers, or skip atomically
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("bad", [
+    '{"fn":"f","bb":"b0","op":"tru',            # truncated JSON
+    '["not","an","object"]',                    # non-object
+    '{"kind":"wat","fn":"f"}',                  # unknown kind
+    '{"fn":"f","bb":"b0","uses":[]}',           # missing op
+    '{"fn":"f","bb":"b0","op":"a","uses":"v0"}',        # uses not a list
+    '{"fn":"f","bb":"b0","op":"a","uses":[1,2]}',       # non-string ids
+    '{"fn":"f","bb":"b0","op":"a","def":5,"uses":[]}',  # non-string def
+    '{"fn":"f","bb":"b0","op":"a","uses":["v0"],"use_tys":[]}',  # mismatch
+    '{"fn":"f","bb":"b0","op":"a","uses":[],"pp":"g:b9:i0"}',    # pp vs fn/bb
+    '{"fn":"f","bb":"b0","op":"a","uses":[],"pp":"f:b0:ix"}',    # bad index
+])
+def test_malformed_raise_and_skip(bad):
+    ok = [rec(op="load", **{"def": "v0"}, uses=[]),
+          rec(op="add", pp=None, **{"def": "v1"}, uses=["v0"])]
+    lines = [ok[0], bad, ok[1]]
+    with pytest.raises(TraceFormatError, match="line 2"):
+        ingest_trace(lines)
+    g, st = ingest_trace_with_stats(lines, on_error="skip")
+    assert st.skipped == 1 and st.records == 2
+    # atomic skip: identical to the trace without the bad line
+    g_ref = ingest_trace(ok)
+    assert g.n == g_ref.n
+    assert np.array_equal(g.src, g_ref.src)
+    assert np.array_equal(g.dst, g_ref.dst)
+    assert np.array_equal(g.w, g_ref.w)
+
+
+def test_out_of_order_pp():
+    lines = [rec(pp="f:b0:i0", **{"def": "v0"}),
+             rec(pp="f:b0:i5", **{"def": "v1"}),
+             rec(pp="f:b0:i3", **{"def": "v2"}),     # rewinds inside the run
+             rec(pp="f:b0:i6", **{"def": "v3"})]
+    with pytest.raises(TraceFormatError, match="out-of-order"):
+        ingest_trace(lines)
+    g, st = ingest_trace_with_stats(lines, on_error="skip")
+    assert st.skipped == 1 and g.n == 3
+    # a block *change* resets the index legally (loop re-entry)
+    lines2 = [rec(pp="f:b0:i0", **{"def": "v0"}),
+              rec(bb="b1", pp="f:b1:i0", **{"def": "v1"}),
+              rec(pp="f:b0:i0", **{"def": "v2"})]
+    assert ingest_trace(lines2).n == 3
+
+
+def test_self_looping_block_reentry():
+    """A single-block loop executed back-to-back re-enters the block: the
+    pp index rewinds to the run's first index, which is legal (real
+    dynamic traces of self-looping blocks look exactly like this)."""
+    lines = [rec(bb="loop", pp="f:loop:i0", op="add", **{"def": "v0"}),
+             rec(bb="loop", pp="f:loop:i1", op="icmp", **{"def": "v1"},
+                 uses=["v0"]),
+             rec(bb="loop", pp="f:loop:i0", op="add", **{"def": "v0"},
+                 uses=["v0"]),
+             rec(bb="loop", pp="f:loop:i1", op="icmp", **{"def": "v1"},
+                 uses=["v0"])]
+    g, st = ingest_trace_with_stats(lines)
+    assert st.records == 4 and st.skipped == 0
+    # iteration 2's add uses iteration 1's def (rolling def-table)
+    assert (0, 2) in set(zip(g.src.tolist(), g.dst.tolist()))
+    # a CFG with a loop self-edge allows it; one without flags it
+    with_self = ['{"kind":"block","fn":"f","bb":"loop",'
+                 '"succs":["loop","exit"]}']
+    assert ingest_trace(lines, cfg=with_self).n == 4
+    no_self = ['{"kind":"block","fn":"f","bb":"loop","succs":["exit"]}']
+    with pytest.raises(TraceFormatError, match="not a CFG edge"):
+        ingest_trace(lines, cfg=no_self)
+    # a rewind that is NOT a restart from the first index stays an error
+    bad = lines[:2] + [rec(bb="loop", pp="f:loop:i1", op="x", uses=[])]
+    with pytest.raises(TraceFormatError, match="out-of-order"):
+        ingest_trace(bad)
+
+
+def test_use_tys_elements_validated():
+    bad = [rec(op="add", **{"def": "v0"}, uses=["x"], use_tys=[7])]
+    with pytest.raises(TraceFormatError, match="use_tys"):
+        ingest_trace(bad)
+    g, st = ingest_trace_with_stats(bad, on_error="skip")
+    assert st.skipped == 1 and g.n == 0      # atomic: nothing half-added
+    # null elements are legal: fall through to the default weight
+    ok = [rec(op="add", **{"def": "v0"}, uses=["x", "y"],
+              use_tys=[None, "i32"])]
+    assert ingest_trace(ok).w.tolist() == [8.0, 4.0]
+
+
+def test_cfg_missing_field_reports_line():
+    from repro.trace import load_cfg
+    with pytest.raises(TraceFormatError, match="line 2.*missing field"):
+        load_cfg(['{"kind":"block","fn":"f","bb":"b0","succs":[]}',
+                  '{"kind":"edge","fn":"f","to":"b1"}'])
+
+
+def test_blank_lines_and_cfg_records_skipped():
+    lines = ["", "   ",
+             '{"kind":"block","fn":"f","bb":"b0","succs":["b1"]}',
+             rec(**{"def": "v0"})]
+    g, st = ingest_trace_with_stats(lines)
+    assert g.n == 1 and st.cfg_records == 1 and st.skipped == 0
+
+
+def test_cfg_block_ordering_validation():
+    cfg = ['{"kind":"block","fn":"f","bb":"b0","succs":["b1"]}',
+           '{"kind":"block","fn":"f","bb":"b1","succs":["b0","b2"]}']
+    ok = [rec(bb="b0", pp="f:b0:i0", **{"def": "v0"}),
+          rec(bb="b1", pp="f:b1:i0", **{"def": "v1"}),
+          rec(bb="b0", pp="f:b0:i0", **{"def": "v2"})]
+    assert ingest_trace(ok, cfg=cfg).n == 3
+    bad = [ok[0], rec(bb="b2", pp="f:b2:i0", **{"def": "v1"})]
+    with pytest.raises(TraceFormatError, match="not a CFG edge"):
+        ingest_trace(bad, cfg=cfg)
+    g, st = ingest_trace_with_stats(bad, cfg=cfg, on_error="skip")
+    assert st.cfg_violations == 1 and g.n == 1
+
+
+# ---------------------------------------------------------------------- #
+# streaming invariance (chunking must never change the graph)
+# ---------------------------------------------------------------------- #
+def test_chunk_invariance_and_buffer_bound():
+    lines = list(iter_synthetic_trace(3000, seed=7))
+    ref = ingest_trace(lines, chunk_edges=1 << 30)
+    for chunk in (1, 64, 1023):
+        g, st = ingest_trace_with_stats(lines, chunk_edges=chunk)
+        assert g.n == ref.n
+        assert np.array_equal(g.src, ref.src)
+        assert np.array_equal(g.dst, ref.dst)
+        assert np.array_equal(g.w, ref.w)
+        # the Python buffer never grows past chunk + one record's uses
+        assert st.peak_chunk_edges <= chunk + 8
+
+
+def test_synthetic_trace_deterministic_and_powerlaw():
+    a = list(iter_synthetic_trace(2000, seed=1))
+    b = list(iter_synthetic_trace(2000, seed=1))
+    assert a == b
+    g = ingest_trace(a)
+    assert g.num_edges > 2000          # ~1.85 uses/record
+    assert 1.1 < g.power_law_alpha() < 4.0
+
+
+# ---------------------------------------------------------------------- #
+# CFG replay: static listing -> dynamic graph
+# ---------------------------------------------------------------------- #
+STATIC = [
+    rec(bb="entry", pp="f:entry:i0", op="load", **{"def": "v0"},
+        uses=["arg0"], use_tys=["ptr"]),
+    rec(bb="loop", pp="f:loop:i0", op="add", **{"def": "v1"},
+        uses=["v0", "v1"], use_tys=["i32", "i32"]),
+    rec(bb="exit", pp="f:exit:i0", op="ret", uses=["v1"], use_tys=["i32"]),
+]
+CFG_LINES = [
+    '{"kind":"block","fn":"f","bb":"entry","succs":["loop"]}',
+    '{"kind":"block","fn":"f","bb":"loop","succs":["loop","exit"]}',
+    '{"kind":"path","fn":"f","path_id":0,'
+    '"bbs":["entry","loop","loop","loop","exit"]}',
+]
+
+
+def test_replay_expands_loop_iterations():
+    g, st = replay_trace(STATIC, CFG_LINES, keep_labels=True)
+    # load + 3 loop adds + ret + liveins (arg0, first-iteration v1)
+    assert st.records == 5 and g.n == 7
+    labels = list(g.node_labels)
+    adds = [i for i, lb in enumerate(labels) if lb == "add"]
+    assert len(adds) == 3
+    # loop-carried dependency: add_k uses add_{k-1}'s def
+    edges = set(zip(g.src.tolist(), g.dst.tolist()))
+    assert (adds[0], adds[1]) in edges and (adds[1], adds[2]) in edges
+    # first iteration's v1 use is a live-in vertex, not a future def
+    assert (labels.index("v1"), adds[0]) in edges
+
+
+def test_replay_repeat_and_filters():
+    g1, st1 = replay_trace(STATIC, CFG_LINES)
+    g2, st2 = replay_trace(STATIC, CFG_LINES, repeat=3)
+    assert st2.records == 3 * st1.records
+    g3, st3 = replay_trace(STATIC, CFG_LINES, fn="other")
+    assert st3.records == 0 and g3.n == 0
+    g4, st4 = replay_trace(STATIC, CFG_LINES, path_ids=[99])
+    assert st4.records == 0
+
+
+# ---------------------------------------------------------------------- #
+# type parsing + pipeline threading + CLI
+# ---------------------------------------------------------------------- #
+def test_type_bytes_palette():
+    assert type_bytes("i1") == 1.0 and type_bytes("i32") == 4.0
+    assert type_bytes("double") == 8.0 and type_bytes("float") == 4.0
+    assert type_bytes("ptr") == 8.0 and type_bytes("i8*") == 8.0
+    assert type_bytes("<4 x float>") == 16.0
+    assert type_bytes("[16 x i8]") == 16.0
+    assert type_bytes("[2 x <4 x i32>]") == 32.0
+    assert type_bytes("%struct.opaque") == 8.0      # default
+    assert type_bytes(None) == 8.0
+
+
+def test_load_graph_and_run_pipeline_paths(tmp_path):
+    trace = tmp_path / "t.ndjson"
+    trace.write_text("\n".join(iter_synthetic_trace(500, seed=2)) + "\n")
+    g = load_graph(str(trace))
+    npz = tmp_path / "t.npz"
+    g.save_npz(str(npz))
+    for source in (str(trace), str(npz)):
+        part, mapping, rep = run_pipeline(source, 4, "wb_libra")
+        assert rep.p == 4 and rep.exec_time > 0
+    with pytest.raises(TypeError):
+        run_pipeline(123, 4, "wb_libra")
+
+
+def test_committed_example_traces():
+    import pathlib
+    tdir = pathlib.Path(__file__).resolve().parent.parent / "examples/traces"
+    trace, cfg = tdir / "toy_loop.ndjson", tdir / "toy_loop.cfg.ndjson"
+    g, st = ingest_trace_with_stats(str(trace), cfg=str(cfg))
+    assert st.records == 10 and st.cfg_violations == 0
+    g2, st2 = replay_trace(str(trace), str(cfg))
+    assert st2.records == 31          # entry + 4 loop iterations + exit
+    # the recorded jaxpr example must round-trip against the live tracer
+    from repro.core.jaxpr_graph import trace_to_graph
+    from repro.trace import demo_program
+    fn, args = demo_program("mlp")
+    ref = trace_to_graph(fn, *args, name="mlp")
+    g3 = ingest_trace(str(tdir / "mlp_jaxpr.ndjson"))
+    assert g3.n == ref.n
+    assert np.array_equal(g3.src, ref.src)
+    assert np.array_equal(g3.dst, ref.dst)
+    assert np.allclose(g3.w, ref.w, rtol=1e-12, atol=0.0)
+
+
+def test_cli_subcommands(tmp_path, capsys):
+    from repro.trace.__main__ import main
+    trace = tmp_path / "t.ndjson"
+    assert main(["synth", str(trace), "--lines", "400"]) == 0
+    assert main(["inspect", str(trace)]) == 0
+    out = capsys.readouterr().out
+    assert '"records": 400' in out
+    npz = tmp_path / "t.npz"
+    assert main(["convert", str(trace), str(npz)]) == 0
+    assert load_graph(str(npz)).n > 0
+    assert main(["partition", str(trace), "-p", "4"]) == 0
+    assert '"replication_factor"' in capsys.readouterr().out

@@ -1,0 +1,162 @@
+"""Round-trip oracle: `repro.trace.record` output re-ingested must equal
+`jaxpr_to_graph` **bit-identically** in vertex count and `src`/`dst`,
+with `w` matching to rtol 1e-12 under the `bytes` weight model, and
+`src`/`dst` staying identical under every other weight model.
+
+This is the tier-1 guarantee that the NDJSON front end builds the same
+dynamic dependence graph the jaxpr tracer does — any divergence in the
+def-table/const/live-in creation order breaks it immediately.
+"""
+import io
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jaxpr_graph import jaxpr_to_graph, trace_to_graph
+from repro.trace import (DEMO_PROGRAMS, WEIGHT_MODELS, demo_program,
+                         ingest_trace, record_graph)
+
+try:        # the randomized search deepens when the [test] extra exists
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def roundtrip(g):
+    buf = io.StringIO()
+    lines = record_graph(g, buf)
+    assert lines >= 1
+    buf.seek(0)
+    return ingest_trace(buf, weight_model="bytes", keep_labels=True)
+
+
+def assert_bit_identical(g, g2, check_w=True):
+    assert g2.n == g.n
+    assert np.array_equal(g.src, g2.src)
+    assert np.array_equal(g.dst, g2.dst)
+    if check_w:
+        assert np.allclose(g.w, g2.w, rtol=1e-12, atol=0.0)
+
+
+@pytest.mark.parametrize("name", sorted(DEMO_PROGRAMS))
+def test_demo_program_roundtrip(name):
+    fn, args = demo_program(name)
+    g = trace_to_graph(fn, *args, name=name)
+    assert_bit_identical(g, roundtrip(g))
+
+
+@pytest.mark.parametrize("name", sorted(DEMO_PROGRAMS))
+@pytest.mark.parametrize("model", sorted(WEIGHT_MODELS))
+def test_roundtrip_edges_identical_across_weight_models(name, model):
+    fn, args = demo_program(name)
+    g = trace_to_graph(fn, *args, name=name)
+    buf = io.StringIO()
+    record_graph(g, buf)
+    buf.seek(0)
+    g2 = ingest_trace(buf, weight_model=model)
+    # src/dst are weight-model independent; w is exact for "bytes"
+    assert_bit_identical(g, g2, check_w=(model == "bytes"))
+
+
+def test_jit_wrapped_roundtrip():
+    """pjit inlining creates boundary const vertices — the trickiest
+    creation-order case for the serializer."""
+    @jax.jit
+    def f(x, w):
+        h = jnp.tanh(x @ w + 1.5)
+        return (h * 2.0).sum()
+
+    g = trace_to_graph(f, jnp.ones((4, 8)), jnp.ones((8, 4)), name="jit")
+    assert_bit_identical(g, roundtrip(g))
+
+
+def test_scan_roundtrip_unroll_depths():
+    def rnn(xs, w):
+        def step(h, x):
+            h = jnp.tanh(h @ w + x)
+            return h, h
+        _, ys = jax.lax.scan(step, jnp.zeros((4,), xs.dtype), xs)
+        return ys.sum()
+
+    cj = jax.make_jaxpr(rnn)(jnp.ones((6, 4)), jnp.ones((4, 4)))
+    for unroll in (1, 3, 8):
+        g = jaxpr_to_graph(cj, name="rnn", max_scan_unroll=unroll)
+        assert_bit_identical(g, roundtrip(g))
+
+
+def _mlp_roundtrip(depth, width, batch, residual, reduce_op):
+    def fwd(x, ws):
+        for w in ws:
+            h = jnp.tanh(x @ w)
+            x = x + h if residual else h
+        return getattr(jnp, reduce_op)(x)
+
+    ws = [jnp.ones((width, width), jnp.float32) for _ in range(depth)]
+    g = trace_to_graph(fwd, jnp.ones((batch, width), jnp.float32), ws,
+                       name="mlp_prop")
+    assert_bit_identical(g, roundtrip(g))
+
+
+def _op_soup_roundtrip(seed, n_eqns):
+    """Random elementwise/matmul op soups over a shared pool of values —
+    stresses literal-heavy and fan-out-heavy graphs."""
+    rng = np.random.default_rng(seed)
+    ops = rng.integers(0, 4, n_eqns)
+    picks = rng.integers(0, 1 << 30, (n_eqns, 2))
+
+    def soup(x, y):
+        pool = [x, y]
+        for k in range(n_eqns):
+            a = pool[picks[k, 0] % len(pool)]
+            b = pool[picks[k, 1] % len(pool)]
+            if ops[k] == 0:
+                r = a + b
+            elif ops[k] == 1:
+                r = a * 0.5 + b
+            elif ops[k] == 2:
+                r = jnp.maximum(a, b) + 1.0
+            else:
+                r = jnp.tanh(a) * b
+            pool.append(r)
+        return sum(p.sum() for p in pool[2:])
+
+    g = trace_to_graph(soup, jnp.ones((3, 3)), jnp.ones((3, 3)),
+                       name="soup")
+    assert_bit_identical(g, roundtrip(g))
+
+
+# seeded sweeps always run (tier-1 must enforce the oracle even without
+# the [test] extra); hypothesis widens the same search when present
+@pytest.mark.parametrize("depth,width,batch,residual,reduce_op", [
+    (1, 2, 1, False, "sum"), (2, 5, 3, True, "max"), (3, 8, 4, True, "mean"),
+])
+def test_mlp_roundtrip_seeded(depth, width, batch, residual, reduce_op):
+    _mlp_roundtrip(depth, width, batch, residual, reduce_op)
+
+
+@pytest.mark.parametrize("seed,n_eqns", [(0, 2), (7, 12), (1234, 24)])
+def test_op_soup_roundtrip_seeded(seed, n_eqns):
+    _op_soup_roundtrip(seed, n_eqns)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        depth=st.integers(1, 3),
+        width=st.sampled_from([2, 3, 5, 8]),
+        batch=st.integers(1, 4),
+        residual=st.booleans(),
+        reduce_op=st.sampled_from(["sum", "max", "mean"]),
+    )
+    def test_random_mlp_roundtrip(depth, width, batch, residual, reduce_op):
+        """Property: every traceable program round-trips bit-identically."""
+        _mlp_roundtrip(depth, width, batch, residual, reduce_op)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), n_eqns=st.integers(2, 24))
+    def test_random_op_soup_roundtrip(seed, n_eqns):
+        _op_soup_roundtrip(seed, n_eqns)
