@@ -28,7 +28,8 @@ import sys
 MEASURED = {"us_per_edge", "us_total", "replication_factor",
             "us_per_cluster", "exec_time", "data_comm_bytes",
             "edges_per_s", "comm_bytes", "pct_of_compnet",
-            "speedup_vs_compnet"}
+            "speedup_vs_compnet", "imbalance", "w_variant_time",
+            "excess_vs_unbounded"}
 
 
 def _key(row: dict) -> tuple:

@@ -1,6 +1,12 @@
 """Paper Figs. 9-10 full cluster sweep: execution time and communication
 across p = 8..1024 (the U-shaped communication trend beyond 128 clusters
-from §6.2.4)."""
+from §6.2.4).
+
+Rows carry the deterministic model outputs (`exec_time`,
+`data_comm_bytes`) under the names `check_regression.py` treats as
+measured, so the committed baseline gates the sweep in CI: any drift in
+these quantities means the partition/mapping/simulation algorithms
+changed, not the machine."""
 from __future__ import annotations
 
 from repro.core import run_pipeline
@@ -20,8 +26,8 @@ def run(scale: str = "reduced", names=None) -> list[dict]:
                 times.append(rep.exec_time)
                 comms.append(rep.data_comm_bytes)
                 rows.append({"graph": g.name, "method": m, "p": p,
-                             "exec": rep.exec_time,
-                             "comm": rep.data_comm_bytes})
+                             "exec_time": rep.exec_time,
+                             "data_comm_bytes": rep.data_comm_bytes})
                 emit(f"cluster_sweep/{g.name}/{m}/p{p}", us,
                      f"exec_s={rep.exec_time:.3e};"
                      f"comm_bytes={rep.data_comm_bytes:.3e}")

@@ -1,5 +1,10 @@
 """Paper Fig. 11: execution time of WB-Libra / WB-PG as λ grows from 1.
-The W-* variants (no bound) are the asymptote; the paper recommends λ=1."""
+The W-* variants (no bound) are the asymptote; the paper recommends λ=1.
+
+`exec_time` (per λ) and `w_variant_time` (the unbounded asymptote) are
+deterministic model outputs; the committed baseline gates both in CI
+via `check_regression.py` so the λ-sensitivity curve cannot silently
+reshape."""
 from __future__ import annotations
 
 from repro.core import run_pipeline

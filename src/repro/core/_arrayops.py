@@ -43,13 +43,20 @@ def dedup_edges(n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray
 
 
 def replica_csr(n: int, p: int, src: np.ndarray, dst: np.ndarray,
-                assignment: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                assignment: np.ndarray,
+                backend: str = "numpy") -> tuple[np.ndarray, np.ndarray]:
     """Per-vertex replica sets A(v) as a CSR over sorted cluster ids.
 
     A vertex's replica set is the set of clusters hosting an incident
     edge; vectorized as a unique-sort over (vertex, cluster) pairs.
-    Returns (indptr int64[n+1], flat int32[sum |A(v)|]).
+    Returns (indptr int64[n+1], flat int32[sum |A(v)|]).  With
+    `backend="pallas"` the sort/unique runs on-device through
+    `repro.core.pallas.metrics` (bit-identical; numpy views returned).
     """
+    if backend == "pallas":
+        from .pallas.metrics import replica_csr as _device_csr
+        indptr, flat = _device_csr(n, p, src, dst, assignment)
+        return np.asarray(indptr), np.asarray(flat)
     v = np.concatenate([src, dst]).astype(np.int64)
     c = np.concatenate([assignment, assignment]).astype(np.int64)
     key = np.unique(v * p + c)

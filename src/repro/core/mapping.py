@@ -12,7 +12,7 @@ factors of Fig. 7 drive the greedy decisions:
              (architecture decomposition spreads traffic), avoiding the
              region of the cluster's strongest (weak) interaction peer.
 
-Like `vertex_cut`, the layer runs on one of two engines selected with
+Like `vertex_cut`, the layer runs on one of three engines selected with
 `backend=`:
 
   reference — the original per-cluster Python scans over every core and
@@ -26,6 +26,11 @@ Like `vertex_cut`, the layer runs on one of two engines selected with
               masked argmin selection.  Bit-identical `core_of` to the
               reference: same greedy order, same (occupancy, hops)
               lexicographic keys, same lowest-index tie-breaking.
+  pallas    — interaction graphs run on-accelerator through the Pallas
+              segment-sum kernel layer (`repro.core.pallas.metrics`),
+              bit-identical to the fast path; the greedy placement
+              itself is an inherently sequential scalar loop and reuses
+              the fast engine, so `core_of` stays bit-identical too.
 
 The same `Machine` abstraction doubles as the TPU-pod ICI mesh in
 `launch/mesh.py`, where "cores" are chips and "NUMA regions" are pods.
@@ -43,20 +48,20 @@ __all__ = ["Machine", "MappingResult", "memory_centric_mapping",
            "cluster_interaction_graphs", "round_robin_mapping",
            "MAPPING_BACKENDS", "resolve_mapping_backend"]
 
-MAPPING_BACKENDS = ("fast", "reference")
+MAPPING_BACKENDS = ("fast", "reference", "pallas")
 
 
 def resolve_mapping_backend(backend: str) -> str:
     """Map a pipeline-level backend choice onto a mapping/sim engine.
 
     The partitioner distinguishes "native"/"python" fast engines; the
-    mapping and simulator layers only have one fast path, so anything
-    that is not the reference oracle runs on it.
+    mapping and simulator layers keep "reference" and "pallas" and run
+    everything else on the numpy fast path.
     """
     if backend not in _PARTITIONER_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"choose from {_PARTITIONER_BACKENDS}")
-    return "reference" if backend == "reference" else "fast"
+    return backend if backend in ("reference", "pallas") else "fast"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,6 +200,12 @@ def cluster_interaction_graphs(replicas, p: int,
     the vectorized fast path directly) or the legacy list-of-sets view.
     """
     backend = resolve_mapping_backend(backend)
+    if backend == "pallas":
+        from .pallas import metrics as _pallas_metrics
+        indptr, members = _as_replica_csr(replicas)
+        comm, shared = _pallas_metrics.interaction_from_csr(
+            indptr, members, p, vertex_bytes, pairwise_cap)
+        return np.asarray(comm), np.asarray(shared)
     if backend == "fast":
         indptr, members = _as_replica_csr(replicas)
         return interaction_from_csr(indptr, members, p, vertex_bytes,
@@ -258,7 +269,10 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
       backend: "fast" (masked-argmin placement over precomputed hop and
         region arrays) or "reference" (per-core Python scans, the oracle).
         Both produce bit-identical `core_of`; the partitioner-level
-        engine names "native"/"python" resolve to "fast".
+        engine names "native"/"python" resolve to "fast", and "pallas"
+        also places on the fast engine (the greedy loop is an inherently
+        sequential scalar scan — only the interaction reductions have an
+        accelerator port).
     """
     backend = resolve_mapping_backend(backend)
     p = comm.shape[0]
@@ -271,7 +285,7 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
                                    kind="stable")
     own = np.maximum(np.diagonal(shared), 1.0)
 
-    place = _place_fast if backend == "fast" else _place_reference
+    place = _place_reference if backend == "reference" else _place_fast
     core_of = place(comm, off_diag, own, machine, cluster_order,
                     colocate_min_overlap)
     return MappingResult(machine=machine, core_of=core_of, p=p)

@@ -1,0 +1,125 @@
+"""Device-side ports of the replica-CSR / interaction metrics.
+
+These mirror the numpy implementations in `.._arrayops` but keep every
+intermediate a jax array, with the reductions routed through the Pallas
+`segment_sum` kernel — partition → metrics → mapping runs end-to-end on
+the accelerator next to the traced graphs.  (`vertex_cut._finalize` and
+the simulator consume `keyed_sum` directly for their load/time
+accumulations.)  Each function documents which numpy oracle it must
+match and how tightly:
+
+  * integer outputs (replica CSR, shared counts, edge counts) are
+    bit-identical — integer sums are order-free;
+  * float accumulations route through `keyed_sum`, whose stable sort +
+    sequential kernel reproduces the oracle's `np.bincount`/`np.add.at`
+    accumulation order, so loads / comm matrices are bit-identical too
+    (the equivalence tests assert exact equality where the oracle order
+    is reproduced and rtol 1e-12 where a true reduction reorders, e.g.
+    `jnp.sum` for total comm bytes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .segsum import keyed_sum, require_pallas, segment_sum, with_x64
+
+try:
+    import jax.numpy as jnp
+except Exception:                       # pragma: no cover - no jax in env
+    jnp = None
+
+__all__ = ["replica_csr", "star_triples", "interaction_from_csr"]
+
+
+@with_x64
+def replica_csr(n: int, p: int, src, dst, assignment):
+    """Device port of `_arrayops.replica_csr` (sorted unique-key CSR).
+
+    Returns (indptr int64[n+1], flat int32[sum |A(v)|]) as jax arrays;
+    bit-identical to the numpy path (both reduce to the sorted unique
+    (vertex, cluster) key set).
+    """
+    require_pallas()
+    v = jnp.concatenate([jnp.asarray(src), jnp.asarray(dst)]).astype(jnp.int64)
+    c = jnp.concatenate([jnp.asarray(assignment)] * 2).astype(jnp.int64)
+    key = jnp.sort(v * p + c)
+    if key.shape[0]:
+        keep = jnp.ones(key.shape, bool).at[1:].set(key[1:] != key[:-1])
+        key = key[keep]
+    indptr = jnp.searchsorted(key, jnp.arange(n + 1, dtype=jnp.int64) * p)
+    return indptr.astype(jnp.int64), (key % p).astype(jnp.int32)
+
+
+def _segment_heads(indptr):
+    """(seg_id, first_pos) per flat CSR entry — device `segment_entries`."""
+    sizes = jnp.diff(indptr)
+    seg_id = jnp.repeat(jnp.arange(sizes.shape[0], dtype=jnp.int64), sizes)
+    return seg_id, indptr[seg_id]
+
+
+@with_x64
+def star_triples(indptr, members, vertex_bytes=None):
+    """Device port of `_arrayops.star_triples` (owner, replica, bytes)."""
+    require_pallas()
+    indptr = jnp.asarray(indptr)
+    members = jnp.asarray(members)
+    seg_id, first_pos = _segment_heads(indptr)
+    non_owner = jnp.arange(members.shape[0], dtype=jnp.int64) != first_pos
+    owners = members[first_pos[non_owner]]
+    replicas = members[non_owner]
+    if vertex_bytes is None:
+        b = jnp.ones(replicas.shape, jnp.float64)
+    else:
+        b = jnp.asarray(vertex_bytes, jnp.float64)[seg_id[non_owner]]
+    return owners, replicas, b
+
+
+@with_x64
+def interaction_from_csr(indptr, members, p: int, vertex_bytes=None,
+                         pairwise_cap: int = 64):
+    """Device port of `_arrayops.interaction_from_csr`.
+
+    (comm[P,P], shared[P,P]) built with p^2-keyed segment sums instead of
+    flat scatters; the star/pairwise key sets are identical to the numpy
+    path and every sum shares its accumulation order, so both outputs
+    are bit-identical to the fast (and hence reference) backends.
+    """
+    require_pallas()
+    indptr = jnp.asarray(indptr)
+    mem = jnp.asarray(members).astype(jnp.int64)
+    if mem.shape[0] == 0:
+        z = jnp.zeros((p, p), jnp.float64)
+        return z, z
+    # diagonal: vertices referencing each cluster (members unique per seg)
+    diag = keyed_sum(mem, jnp.ones(mem.shape, jnp.int64), p)
+    shared = jnp.zeros((p, p), jnp.float64).at[
+        jnp.arange(p), jnp.arange(p)].set(diag.astype(jnp.float64))
+
+    # star comm: owner->replica sums over p^2 keys; owner != replica
+    # always (the owner is the first sorted member), so M has an empty
+    # diagonal and symmetrisation is exactly M + M.T
+    owners, replicas, b = star_triples(indptr, mem, vertex_bytes)
+    comm = jnp.zeros((p, p), jnp.float64)
+    if owners.shape[0]:
+        sums = keyed_sum(owners * p + replicas, b, p * p).reshape(p, p)
+        comm = sums + sums.T
+
+    # capped pairwise shared counts, one size class at a time (same
+    # enumeration as the numpy path; x < y strictly, so S + S.T again)
+    sizes = jnp.diff(indptr)
+    keys = []
+    for s in np.unique(np.asarray(sizes)):
+        s = int(s)
+        if s < 2 or s > pairwise_cap:
+            continue
+        base = indptr[:-1][sizes == s]
+        iu, ju = np.triu_indices(s, k=1)
+        x = mem[(base[:, None] + jnp.asarray(iu)[None, :]).ravel()]
+        y = mem[(base[:, None] + jnp.asarray(ju)[None, :]).ravel()]
+        keys.append(x * p + y)
+    if keys:
+        k = jnp.concatenate(keys)
+        cnt = segment_sum(jnp.ones(k.shape, jnp.int64), jnp.sort(k), p * p)
+        pairs = cnt.astype(jnp.float64).reshape(p, p)
+        shared = shared + pairs + pairs.T
+    return comm, shared

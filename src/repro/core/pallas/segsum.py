@@ -1,0 +1,262 @@
+"""Tiled Pallas segment-sum kernel (sorted-segment-ids contract).
+
+The metrics side of the pipeline — `_finalize`'s replica-set reduction,
+`replica_csr`, `cluster_interaction_graphs`, and the simulator's
+per-cluster/per-core accumulations — is one primitive applied over and
+over: reduce a value stream by a *sorted* key stream.  This module
+implements that primitive as a Pallas kernel so the whole reduction runs
+on-accelerator next to the traced graphs (interpret mode keeps it
+runnable on CPU CI).
+
+Kernel shape
+------------
+One `pallas_call` with a 1-D grid over fixed-size blocks of the flat
+(value, segment-id) stream.  Grid steps execute sequentially (TPU
+"arbitrary" dimension semantics), so a segment spanning a block
+boundary is handled with a **carry** held in SMEM scratch: the running
+(segment id, partial sum) of the stream's current segment.  Inside a
+block a `fori_loop` walks the elements in stream order, flushing the
+carry into `out[segment]` whenever the id changes.  Because every
+segment is flushed exactly once — when the next distinct id first
+appears, or by the final block's epilogue — the kernel *assigns* rather
+than scatter-adds, and the strict left-to-right accumulation makes the
+result bit-identical to the sequential numpy oracles (`np.bincount`,
+`np.add.at`) on the same sorted stream — not merely close: the same
+float rounding.  (`np.add.reduceat` reduces pairwise, so floats match
+it to rtol 1e-12 rather than exactly.)
+
+The output block (`num_segments` slots plus one slack slot that absorbs
+the padded tail) is revisited by every grid step and therefore lives in
+VMEM for the whole call — `num_segments` must fit on-chip (fine for
+cluster/core/p^2-keyed reductions; vertex-keyed reductions at millions
+of segments would need an output-tiled variant, see ROADMAP).
+
+Contract: `segment_ids` must be sorted ascending (the callers all
+produce sorted keys via stable argsort — see `keyed_sum`); violations
+silently misreduce unless `validate=True`.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+try:                                    # optional accelerator layer
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    _IMPORT_ERROR = None
+except Exception as e:                  # pragma: no cover - no jax in env
+    jax = jnp = lax = pl = pltpu = None
+    _IMPORT_ERROR = e
+
+__all__ = ["pallas_available", "require_pallas", "segment_sum", "keyed_sum",
+           "with_x64", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 4096
+_MIN_SEG_SLOTS = 128
+_probe_result: "bool | None" = None
+_probe_error: "BaseException | str | None" = None
+
+
+def _interpret_default() -> bool:
+    """Interpret mode everywhere except a real TPU backend.
+
+    `REPRO_PALLAS_INTERPRET=0/1` overrides (e.g. to force-interpret on
+    TPU while debugging, or to try the compiled path on GPU).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:                   # pragma: no cover - backend probing
+        return True
+
+
+def pallas_available() -> bool:
+    """True when the Pallas segment-sum layer actually works here.
+
+    Goes beyond an import check: runs one tiny multi-block reduction
+    (cached) so a jax version with an incompatible pallas API reports
+    unavailable instead of failing deep inside the pipeline — callers
+    and CI then fall back to / test only the numpy backends.
+    """
+    global _probe_result, _probe_error
+    if _probe_result is None:
+        if jax is None:
+            _probe_result, _probe_error = False, _IMPORT_ERROR
+        else:
+            try:
+                got = segment_sum(
+                    jnp.asarray(np.ones(6)), jnp.asarray([0, 0, 1, 3, 3, 3]),
+                    4, block_size=2)
+                _probe_result = np.array_equal(
+                    np.asarray(got), [2.0, 1.0, 0.0, 3.0])
+                if not _probe_result:   # pragma: no cover - foreign jax API
+                    _probe_error = f"probe miscomputed: {np.asarray(got)!r}"
+            except Exception as e:      # pragma: no cover - foreign jax API
+                _probe_result, _probe_error = False, e
+    return _probe_result
+
+
+def require_pallas() -> None:
+    if not pallas_available():
+        raise RuntimeError(
+            "backend='pallas' needs a working jax.experimental.pallas "
+            f"(probe failed with: {_probe_error!r}); use backend='fast'")
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def with_x64(fn):
+    """Run `fn` under thread-scoped x64 (`jax.experimental.enable_x64`).
+
+    The oracle paths carry float64 weights / int64 counters, and a
+    silent downcast would break the rtol-1e-12 / bit-identical
+    guarantees — but flipping the *global* x64 flag from a library
+    import would leak into unrelated jax code in the same process (the
+    model/serving stack traces with int32 indices).  The context
+    manager scopes the precision to this layer's calls only; jit caches
+    key on the config state, so traced kernels stay consistent.
+    """
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        if jax is None:
+            raise RuntimeError(f"pallas layer needs jax: {_IMPORT_ERROR!r}")
+        with jax.experimental.enable_x64():
+            return fn(*args, **kw)
+    return wrapper
+
+
+if jax is not None:
+    def _segsum_kernel(sid_ref, data_ref, out_ref, carry_sid, carry_acc,
+                       *, block: int, nblocks: int):
+        pid = pl.program_id(0)
+
+        @pl.when(pid == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+            carry_sid[0] = sid_ref[0]
+            carry_acc[0] = jnp.zeros((), out_ref.dtype)
+
+        def body(j, _):
+            s_j = sid_ref[j]
+
+            @pl.when(s_j != carry_sid[0])
+            def _flush():
+                out_ref[carry_sid[0]] = carry_acc[0]
+                carry_acc[0] = jnp.zeros((), out_ref.dtype)
+                carry_sid[0] = s_j
+
+            carry_acc[0] = carry_acc[0] + data_ref[j]
+            return 0
+
+        lax.fori_loop(0, block, body, 0)
+
+        @pl.when(pid == nblocks - 1)
+        def _epilogue():
+            # the stream's last segment never sees a successor id; with a
+            # padded tail this writes the slack slot (sentinel id) instead
+            out_ref[carry_sid[0]] = carry_acc[0]
+
+    @functools.partial(jax.jit,
+                       static_argnames=("out_slots", "block", "interpret"))
+    def _segsum_call(sids, data, out_slots: int, block: int, interpret: bool):
+        nblocks = sids.shape[0] // block
+        return pl.pallas_call(
+            functools.partial(_segsum_kernel, block=block, nblocks=nblocks),
+            grid=(nblocks,),
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                      pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((out_slots,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((out_slots,), data.dtype),
+            scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                            pltpu.SMEM((1,), data.dtype)],
+            interpret=interpret,
+        )(sids, data)
+
+
+@with_x64
+def segment_sum(data, segment_ids, num_segments: int, *,
+                block_size: int = DEFAULT_BLOCK,
+                interpret: "bool | None" = None,
+                validate: bool = False):
+    """Sum `data` into `num_segments` buckets keyed by sorted ids.
+
+    Equivalent to the per-segment reduction over the runs (empty
+    segments yield 0), accumulated strictly left-to-right — hence
+    bit-identical to `np.add.at`/`np.bincount` for ints and floats
+    alike, and within rtol 1e-12 of the pairwise `np.add.reduceat`.
+    Lengths are padded to a power-of-two number of `block_size` blocks
+    (sentinel ids land in a slack slot) so repeated calls at nearby
+    sizes share jit cache entries.
+
+    Args:
+      data: 1-D values (any numeric dtype; float64/int64 preserved).
+      segment_ids: 1-D ascending ints parallel to `data`.
+      num_segments: bucket count (ids must be < num_segments).
+      block_size: flat-stream tile; segments may span any number of
+        blocks (the carry handles the boundaries).
+      interpret: force Pallas interpret mode (default: auto — compiled
+        on TPU, interpret elsewhere; see REPRO_PALLAS_INTERPRET).
+      validate: host-check the sorted/range contract (debug aid).
+
+    Returns:
+      jax array of shape (num_segments,), dtype of `data`.
+    """
+    if jax is None:
+        raise RuntimeError(f"pallas layer needs jax: {_IMPORT_ERROR!r}")
+    data = jnp.asarray(data)
+    sids = jnp.asarray(segment_ids)
+    if data.ndim != 1 or sids.shape != data.shape:
+        raise ValueError("data and segment_ids must be parallel 1-D arrays")
+    if num_segments < 0:
+        raise ValueError("num_segments must be >= 0")
+    if validate and data.shape[0]:
+        s = np.asarray(sids)
+        if (np.diff(s) < 0).any():
+            raise ValueError("segment_ids must be sorted ascending")
+        if s[0] < 0 or s[-1] >= num_segments:
+            raise ValueError("segment_ids must lie in [0, num_segments)")
+    m = data.shape[0]
+    if m == 0 or num_segments == 0:
+        return jnp.zeros((num_segments,), data.dtype)
+    if interpret is None:
+        interpret = _interpret_default()
+    block = block_size
+    padded = block * _next_pow2(-(-m // block))
+    # one slack slot absorbs the padded tail's sentinel id; the segment
+    # axis is padded to a floored power of two as well — together with
+    # the power-of-two block count this collapses nearby problem sizes
+    # onto a handful of jit-cache entries (compiles, not runs, dominate
+    # interpret-mode cost on small inputs)
+    out_slots = max(_next_pow2(num_segments), _MIN_SEG_SLOTS) + 1
+    sids = jnp.concatenate(
+        [sids.astype(jnp.int32),
+         jnp.full((padded - m,), out_slots - 1, jnp.int32)])
+    data = jnp.concatenate([data, jnp.zeros((padded - m,), data.dtype)])
+    out = _segsum_call(sids, data, out_slots, block, bool(interpret))
+    return out[:num_segments]
+
+
+@with_x64
+def keyed_sum(keys, values, num_keys: int, **kw):
+    """`segment_sum` over *unsorted* keys: stable-sort first.
+
+    The stable sort preserves the relative order of entries sharing a
+    key, so the per-bucket accumulation order equals the stream order —
+    exactly `np.bincount(keys, weights=values)` / `np.add.at`, bit for
+    bit.  This is the workhorse the metric ports call.
+    """
+    if jax is None:
+        raise RuntimeError(f"pallas layer needs jax: {_IMPORT_ERROR!r}")
+    keys = jnp.asarray(keys)
+    values = jnp.asarray(values)
+    order = jnp.argsort(keys, stable=True)
+    return segment_sum(values[order], keys[order], num_keys, **kw)

@@ -58,7 +58,9 @@ def plan_graph(g, p: int, method: str = "wb_libra",
                lam: float = 1.0, machine: Machine | None = None,
                backend: str = "fast") -> PlanReport:
     """Plan `g` — an `IRGraph`, or a path to an `.npz` snapshot / NDJSON
-    dynamic trace (the `repro.trace` front end)."""
+    dynamic trace (the `repro.trace` front end).  `backend` threads
+    through every stage ("fast"/"native"/"python"/"pallas"/"reference");
+    "pallas" keeps the finalize/metrics reductions on-accelerator."""
     g = coerce_graph(g)
     cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
     map_backend = resolve_mapping_backend(backend)

@@ -20,12 +20,14 @@ cluster an analytic cost on the same machine model used by the mapper:
 Outputs: overall execution time (max over cores + sync) and total
 inter-core data communication, the two quantities in Tables 6–9.
 
-Like the partitioner and the mapper, the simulator runs on one of two
+Like the partitioner and the mapper, the simulator runs on one of three
 engines selected with `backend=`: "fast" (default) builds the vertex-cut
 (owner, dst, bytes) replica-sync triples straight from the replica CSR
-with no Python loop (`_arrayops.star_triples`); "reference" is the
-original per-vertex loop over `set` replica sets, kept as the oracle
-(tests assert the two SimReports agree to rtol 1e-12).
+with no Python loop (`_arrayops.star_triples`); "pallas" runs the same
+accumulations on-accelerator through the segment-sum kernel layer
+(`repro.core.pallas`); "reference" is the original per-vertex loop over
+`set` replica sets, kept as the oracle (tests assert all SimReports
+agree to rtol 1e-12; the pallas/fast core_times are bit-identical).
 """
 from __future__ import annotations
 
@@ -81,7 +83,11 @@ def vertex_bytes_model(g: IRGraph) -> np.ndarray:
 # ---------------------------------------------------------------------- #
 def simulate(g: IRGraph, partition, mapping: MappingResult,
              backend: str = "fast") -> SimReport:
-    """Execute a partition (vertex- or edge-cut) on the mapped machine."""
+    """Execute a partition (vertex- or edge-cut) on the mapped machine.
+
+    `backend="pallas"` applies to vertex cuts (the paper's subject);
+    edge-cut baselines always score on the numpy path.
+    """
     backend = resolve_mapping_backend(backend)
     if isinstance(partition, VertexCutResult):
         return _simulate_vertex_cut(g, partition, mapping, backend)
@@ -129,9 +135,55 @@ def _vc_triples_reference(r: VertexCutResult, vb: np.ndarray
             np.asarray(dsts, dtype=np.int64), np.asarray(sizes))
 
 
+def _simulate_pallas_vertex_cut(g: IRGraph, r: VertexCutResult,
+                                mapping: MappingResult) -> SimReport:
+    """Pallas engine: the same cost model with every accumulation routed
+    through the on-device segment-sum kernel (`keyed_sum` reproduces the
+    `np.add.at` accumulation order, so core_times are bit-identical to
+    the fast engine; only the final `sum` reduction may reassociate,
+    hence the rtol-1e-12 contract on `data_comm_bytes`)."""
+    import jax
+    import jax.numpy as jnp
+    from .pallas import keyed_sum, require_pallas
+    from .pallas import metrics as pm
+
+    require_pallas()      # clean error on a broken pallas install
+    mach = mapping.machine
+    cluster_t = np.asarray(keyed_sum(
+        r.assignment, g.w * WEIGHT_TO_SECONDS + INSTR_COST, r.p))
+    core_t = np.asarray(keyed_sum(mapping.core_of, cluster_t,
+                                  mach.n_cores))
+
+    owners, dsts, b = pm.star_triples(*r.replica_csr(), vertex_bytes_model(g))
+    core_wait = np.zeros(mach.n_cores)
+    comm_bytes = 0.0
+    if owners.shape[0]:
+        # the eager glue needs the same thread-scoped x64 as the kernel
+        # layer — float32 hop latencies would void the rtol-1e-12 bound
+        with jax.experimental.enable_x64():
+            core_of = jnp.asarray(mapping.core_of)
+            oc = core_of[owners].astype(jnp.int64)
+            dc = core_of[dsts].astype(jnp.int64)
+            diff = oc != dc       # factor-1 colocation: coherence-free
+            oc, dc, b = oc[diff], dc[diff], b[diff]
+            hops = (jnp.abs(oc // mach.cols - dc // mach.cols)
+                    + jnp.abs(oc % mach.cols - dc % mach.cols))
+            lat = hops * mach.hop_latency + mach.coherence_penalty
+            core_wait = np.asarray(keyed_sum(
+                dc, lat / mach.mshr_overlap + b / mach.link_bw,
+                mach.n_cores))
+            comm_bytes = float(jnp.sum(b))
+    sync_t, sync_b = _sync_model(r.p, mach.n_cores)
+    exec_time = float((core_t + core_wait).max() + sync_t)
+    return SimReport(g.name, r.method, r.p, exec_time,
+                     comm_bytes + sync_b, core_t + core_wait, sync_t, sync_b)
+
+
 def _simulate_vertex_cut(g: IRGraph, r: VertexCutResult,
                          mapping: MappingResult,
                          backend: str = "fast") -> SimReport:
+    if backend == "pallas":
+        return _simulate_pallas_vertex_cut(g, r, mapping)
     mach = mapping.machine
     cluster_t = _per_cluster_compute(g, r.assignment, r.p)
     core_t = _core_compute(cluster_t, mapping)
@@ -213,8 +265,10 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
     trace), vertex/edge cut produces clusters, the memory-centric mapping
     schedules them, and the simulator scores the result.  `backend`
     selects the engine for every stage: the partitioner accepts any of
-    its backends ("fast"/"native"/"python"/"reference"); the mapping and
-    simulator run their reference oracle iff `backend == "reference"`.
+    its backends ("fast"/"native"/"python"/"pallas"/"reference"); the
+    mapping and simulator run their reference oracle iff
+    `backend == "reference"` and the Pallas segment-sum layer iff
+    `backend == "pallas"` (interpret mode on CPU — see README Backends).
     """
     from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
     from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut

@@ -43,6 +43,12 @@ Two engines implement the same streaming semantics, selected with
               deterministic (load, cluster-id) argmin tie-breaking.
   native    — force the C kernel (raises if unavailable).
   python    — force the pure-Python bitmask engine.
+  pallas    — stream on the fast engine, then run `_finalize`'s replica
+              and load reductions on-accelerator through the Pallas
+              segment-sum kernel layer (`repro.core.pallas`); interpret
+              mode keeps it runnable on CPU.  Loads and the replica CSR
+              are bit-identical to the numpy finalize (the kernel
+              reproduces `np.bincount`'s accumulation order).
 """
 from __future__ import annotations
 
@@ -59,11 +65,15 @@ __all__ = ["VertexCutResult", "vertex_cut", "ALGORITHMS", "BACKENDS",
            "resolve_backend"]
 
 ALGORITHMS = ("random", "pg", "libra", "w_pg", "wb_pg", "w_libra", "wb_libra")
-BACKENDS = ("fast", "native", "python", "reference")
+BACKENDS = ("fast", "native", "python", "pallas", "reference")
 
 
 def resolve_backend(backend: str = "fast") -> str:
-    """Concrete engine a backend choice runs on ("native"/"python"/...)."""
+    """Concrete engine a backend choice runs on ("native"/"python"/...).
+
+    "pallas" resolves to itself: its *stream* runs on the fast engine,
+    but the finalize/metrics reductions run on the Pallas kernel layer.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     if backend == "fast":
@@ -184,8 +194,9 @@ def vertex_cut(g: IRGraph, p: int, method: str = "wb_libra",
         edge-order ablation quantifying this).
       backend: "fast" (array-native; C kernel when available, else the
         pure-Python bitmask engine), "native"/"python" to force one fast
-        engine, or "reference" for the original loop (the oracle).  All
-        backends produce identical assignments.
+        engine, "pallas" (fast stream + on-accelerator finalize), or
+        "reference" for the original loop (the oracle).  All backends
+        produce identical assignments.
     """
     if method not in ALGORITHMS:
         raise ValueError(f"unknown method {method!r}; choose from {ALGORITHMS}")
@@ -206,10 +217,14 @@ def vertex_cut(g: IRGraph, p: int, method: str = "wb_libra",
 
     rng = np.random.default_rng(seed)
 
+    if backend == "pallas":
+        from .pallas import require_pallas
+        require_pallas()
+
     if method == "random":
         assignment = np.empty(m, dtype=np.int32)
         assignment[:] = rng.integers(0, p, size=m)
-        return _finalize(g, method, p, lam, assignment)
+        return _finalize(g, method, p, lam, assignment, backend)
 
     if edge_order == "auto":
         edge_order = "trace" if balanced else "shuffled"
@@ -236,9 +251,12 @@ def vertex_cut(g: IRGraph, p: int, method: str = "wb_libra",
         assignment = _stream_reference(g.n, p, src, dst, w, deg, bound,
                                        libra_rule, perm)
     else:
+        # the pallas backend streams on the fast engine: the greedy
+        # stream is inherently sequential, only the reductions move
         assignment = _stream_fast(g.n, p, src, dst, w, deg, bound,
-                                  libra_rule, perm, backend)
-    return _finalize(g, method, p, lam, assignment)
+                                  libra_rule, perm,
+                                  "fast" if backend == "pallas" else backend)
+    return _finalize(g, method, p, lam, assignment, backend)
 
 
 # ---------------------------------------------------------------------- #
@@ -551,11 +569,25 @@ def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
 
 
 def _finalize(g: IRGraph, method: str, p: int, lam: float,
-              assignment: np.ndarray) -> VertexCutResult:
-    indptr, flat = replica_csr(g.n, p, g.src, g.dst, assignment)
-    loads = np.bincount(assignment, weights=g.w,
-                        minlength=p).astype(np.float64)
-    counts = np.bincount(assignment, minlength=p).astype(np.int64)
+              assignment: np.ndarray,
+              backend: str = "fast") -> VertexCutResult:
+    if backend == "pallas":
+        # replica CSR through the shared _arrayops dispatch; loads and
+        # edge counts through the segment-sum kernel (keyed_sum's
+        # stable sort reproduces np.bincount's accumulation order, so
+        # both are bit-identical to the numpy branch below)
+        from .pallas import keyed_sum
+        indptr, flat = replica_csr(g.n, p, g.src, g.dst, assignment,
+                                   backend="pallas")
+        loads = np.asarray(keyed_sum(assignment,
+                                     np.asarray(g.w, np.float64), p))
+        counts = np.asarray(keyed_sum(assignment,
+                                      np.ones(len(assignment), np.int64), p))
+    else:
+        indptr, flat = replica_csr(g.n, p, g.src, g.dst, assignment)
+        loads = np.bincount(assignment, weights=g.w,
+                            minlength=p).astype(np.float64)
+        counts = np.bincount(assignment, minlength=p).astype(np.int64)
     return VertexCutResult(
         graph_name=g.name, method=method, p=p, lam=lam,
         assignment=assignment, loads=loads,

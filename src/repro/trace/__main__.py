@@ -25,7 +25,9 @@ from .weights import WEIGHT_MODELS
 
 
 def _add_ingest_args(sp) -> None:
-    sp.add_argument("trace", help="NDJSON trace file")
+    sp.add_argument("trace",
+                    help="NDJSON trace file (a .gz path is gzip-"
+                         "decompressed transparently; no flag needed)")
     sp.add_argument("--weight-model", default="bytes",
                     choices=sorted(WEIGHT_MODELS))
     sp.add_argument("--on-error", default="raise",

@@ -47,7 +47,6 @@ __all__ = ["TraceStats", "CFG", "ingest_trace", "ingest_trace_with_stats",
            "replay_trace", "load_cfg", "load_graph"]
 
 DEFAULT_CHUNK_EDGES = 1 << 16
-TRACE_SUFFIXES = (".ndjson", ".jsonl", ".trace")
 
 
 @dataclasses.dataclass
@@ -85,11 +84,18 @@ class CFG:
 def _open_lines(source):
     """(line iterable, closer) for a path, file-like, or iterable of lines.
 
+    A `.gz` path is decompressed transparently (instrumentation runs
+    usually gzip their NDJSON streams on the fly; text-mode `gzip.open`
+    streams line-by-line, so the O(chunk) memory bound still holds).
     Lines are passed through raw — `json.loads` tolerates surrounding
     whitespace, and blank lines are dropped in `parse_line`'s error path,
     so the hot loop never strips."""
     if isinstance(source, (str, os.PathLike)):
-        f = open(source, "r", encoding="utf-8")
+        if os.fspath(source).endswith(".gz"):
+            import gzip
+            f = gzip.open(source, "rt", encoding="utf-8")
+        else:
+            f = open(source, "r", encoding="utf-8")
         return f, f.close
     return source, (lambda: None)
 

@@ -315,6 +315,31 @@ def test_load_graph_and_run_pipeline_paths(tmp_path):
         run_pipeline(123, 4, "wb_libra")
 
 
+def test_gzip_source_round_trips(tmp_path):
+    """A .ndjson.gz path must ingest identically to the plain text file
+    (transparent decompression, same stats), end to end through
+    `load_graph` and the CLI."""
+    import gzip
+    text = "\n".join(iter_synthetic_trace(800, seed=5)) + "\n"
+    plain = tmp_path / "t.ndjson"
+    plain.write_text(text)
+    gz = tmp_path / "t.ndjson.gz"
+    with gzip.open(gz, "wt", encoding="utf-8") as f:
+        f.write(text)
+    g_plain, st_plain = ingest_trace_with_stats(str(plain))
+    g_gz, st_gz = ingest_trace_with_stats(str(gz))
+    assert st_gz.summary() == st_plain.summary()
+    assert g_gz.n == g_plain.n
+    assert np.array_equal(g_gz.src, g_plain.src)
+    assert np.array_equal(g_gz.dst, g_plain.dst)
+    assert np.array_equal(g_gz.w, g_plain.w)
+    # the pipeline path dispatch accepts the gzipped trace too
+    part, mapping, rep = run_pipeline(str(gz), 4, "wb_libra")
+    assert rep.p == 4 and rep.exec_time > 0
+    from repro.trace.__main__ import main
+    assert main(["inspect", str(gz)]) == 0
+
+
 def test_committed_example_traces():
     import pathlib
     tdir = pathlib.Path(__file__).resolve().parent.parent / "examples/traces"
