@@ -1,0 +1,111 @@
+"""Distributed sharded partitioner: ingest+partition scaling over workers.
+
+End-to-end throughput of the `repro.dist` subsystem — parallel
+byte-sharded NDJSON parse followed by the W-worker sharded vertex cut —
+at W ∈ {1, 2, 4, 8} on a synthetic dynamic trace whose ingested graph
+matches the partitioner_scaling headline scale (>= 510k edges), plus a
+sequential `reference` row (plain streaming ingester + single-stream
+fast cut) that doubles as the host-speed calibration probe for
+`check_regression.py`.
+
+Gates (`benchmarks/baselines/dist_scaling.json` + CI):
+  * throughput per row (us_per_edge, calibrated geomean factor 2.0);
+  * replication_factor per row — the W>1 cut is deterministic for a
+    fixed (W, seed, merge_period), so any drift means the algorithm
+    changed (quality factor 1.01);
+  * meta.speedup_w4 >= 2x on CI runners (--min-speedup 2.0): the
+    parallel front end must actually pay for itself at W=4.
+
+The W=1 bit-identity contract is asserted outright: same assignment as
+`vertex_cut(..., backend="fast")` on the ingested graph, hence the same
+replication factor.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import vertex_cut
+from repro.dist import dist_ingest, dist_vertex_cut
+from repro.trace import ingest_trace, synthesize_trace
+
+from .common import emit, timed_best, write_bench_json
+
+CACHE_DIR = ".cache/traces"
+LINES = 276_000          # ingests to >= 510k edges (partitioner headline)
+CUT_P = 64
+WORKERS = (1, 2, 4, 8)
+MERGE_PERIOD = 1 << 16
+# best-of-N timing: the W=4/W=1 speedup is a wall-clock ratio gated in
+# CI, so one scheduler hiccup must not be able to sink (or inflate) it
+REPEATS = 2
+
+
+def _trace_path() -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"synth_{LINES}_seed0.ndjson")
+    if not os.path.exists(path):
+        synthesize_trace(path, LINES, seed=0)
+    return path
+
+
+def _row(backend: str, workers: int, edges: int, us: float,
+         rf: float) -> dict:
+    row = {"backend": backend, "workers": workers, "edges": edges,
+           "us_per_edge": round(us / max(edges, 1), 4),
+           "us_total": round(us, 1),
+           "edges_per_s": round(edges / (us / 1e6), 1),
+           "replication_factor": round(rf, 4)}
+    emit(f"dist_scaling/W{workers}/{backend}", us,
+         f"edges_per_s={row['edges_per_s']:.0f}")
+    return row
+
+
+def run() -> list[dict]:
+    path = _trace_path()
+    rows = []
+
+    # sequential oracle + host calibration probe
+    def seq_pipeline():
+        g = ingest_trace(path)
+        return g, vertex_cut(g, CUT_P, method="wb_libra", backend="fast")
+
+    (g_ref, cut_ref), us_ref = timed_best(seq_pipeline, repeats=REPEATS)
+    rows.append(_row("reference", 1, g_ref.num_edges, us_ref,
+                     cut_ref.replication_factor))
+
+    by_w = {}
+    for w in WORKERS:
+        def dist_pipeline(w=w):
+            g = dist_ingest(path, workers=w)
+            return g, dist_vertex_cut(g, CUT_P, method="wb_libra",
+                                      workers=w,
+                                      merge_period=MERGE_PERIOD)
+
+        (g, cut), us = timed_best(dist_pipeline, repeats=REPEATS)
+        row = _row("dist", w, g.num_edges, us, cut.replication_factor)
+        rows.append(row)
+        by_w[w] = row
+        if w == 1:
+            # the W=1 contract: bit-identical to the stream engine
+            assert np.array_equal(cut.assignment, cut_ref.assignment), \
+                "dist workers=1 diverged from the fast streaming engine"
+            assert np.array_equal(g.src, g_ref.src), \
+                "sharded parse (W=1) diverged from the sequential ingester"
+
+    speedup_w4 = by_w[1]["us_total"] / max(by_w[4]["us_total"], 1e-9)
+    rf_ratio_w4 = (by_w[4]["replication_factor"]
+                   / max(by_w[1]["replication_factor"], 1e-9))
+    emit("dist_scaling/speedup_W4", by_w[4]["us_total"],
+         f"vs_W1={speedup_w4:.2f}x rf_ratio={rf_ratio_w4:.3f}")
+    write_bench_json("dist_scaling", rows,
+                     meta={"lines": LINES, "cut_p": CUT_P,
+                           "merge_period": MERGE_PERIOD,
+                           "speedup_w4": round(speedup_w4, 2),
+                           "rf_ratio_w4": round(rf_ratio_w4, 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,8 +13,8 @@ from .graph import IRGraph
 from .powerlaw import (expected_replication_random,
                        expected_replication_random_empirical,
                        synthesize_powerlaw_graph, zipf_degrees)
-from .vertex_cut import (ALGORITHMS, BACKENDS, VertexCutResult,
-                         resolve_backend, vertex_cut)
+from .vertex_cut import (ALGORITHMS, BACKENDS, ShardCutState,
+                         VertexCutResult, resolve_backend, vertex_cut)
 from .edge_cut import EDGE_CUT_METHODS, EdgeCutResult, edge_cut
 from .mapping import (MAPPING_BACKENDS, Machine, MappingResult,
                       cluster_interaction_graphs, memory_centric_mapping,
@@ -25,7 +25,7 @@ from .benchgraphs import BENCHMARKS, Tracer, all_benchmark_names, build_graph
 
 __all__ = [
     "IRGraph", "vertex_cut", "VertexCutResult", "ALGORITHMS",
-    "BACKENDS", "resolve_backend",
+    "BACKENDS", "resolve_backend", "ShardCutState",
     "edge_cut", "EdgeCutResult", "EDGE_CUT_METHODS",
     "Machine", "MappingResult", "memory_centric_mapping",
     "round_robin_mapping", "cluster_interaction_graphs",

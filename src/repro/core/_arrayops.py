@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["csr_adjacency", "dedup_edges", "replica_csr",
-           "segment_entries", "interaction_from_csr", "star_triples"]
+           "segment_entries", "interaction_from_csr", "star_triples",
+           "merge_limb_masks", "merge_deltas"]
 
 
 def csr_adjacency(n: int, src: np.ndarray, dst: np.ndarray
@@ -62,6 +63,42 @@ def replica_csr(n: int, p: int, src: np.ndarray, dst: np.ndarray,
     key = np.unique(v * p + c)
     indptr = np.searchsorted(key, np.arange(n + 1, dtype=np.int64) * p)
     return indptr.astype(np.int64), (key % p).astype(np.int32)
+
+
+# ---------------------------------------------------------------------- #
+# shard-merge primitives (repro.dist periodic state merges)
+# ---------------------------------------------------------------------- #
+def merge_limb_masks(masks: "list[np.ndarray]") -> np.ndarray:
+    """OR-combine per-shard replica bitmask limb arrays into one.
+
+    Every shard keeps its own `uint64[n*limbs]` A(v) bitmask rows (the
+    chunked-limb layout is shard-local by construction); the merged
+    array is their element-wise union — order-free, so any combine
+    order yields the identical result.
+    """
+    if not masks:
+        raise ValueError("need at least one mask array to merge")
+    out = masks[0].copy()
+    for m in masks[1:]:
+        np.bitwise_or(out, m, out=out)
+    return out
+
+
+def merge_deltas(snapshot: np.ndarray,
+                 locals_: "list[np.ndarray]") -> np.ndarray:
+    """Reduce per-shard accumulator views against their common snapshot.
+
+    Each shard's `local` equals `snapshot + (its own contributions)`;
+    the merged value is `snapshot + sum_s (local_s - snapshot)`,
+    accumulated in shard order so the result is deterministic for a
+    fixed shard list (exact for integer arrays, fixed-rounding for
+    float loads).  Used for the periodic `load` / remaining-degree
+    merges of the distributed partitioner.
+    """
+    out = snapshot.copy()
+    for loc in locals_:
+        out += loc - snapshot
+    return out
 
 
 # ---------------------------------------------------------------------- #

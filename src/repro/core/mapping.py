@@ -54,13 +54,14 @@ MAPPING_BACKENDS = ("fast", "reference", "pallas")
 def resolve_mapping_backend(backend: str) -> str:
     """Map a pipeline-level backend choice onto a mapping/sim engine.
 
-    The partitioner distinguishes "native"/"python" fast engines; the
-    mapping and simulator layers keep "reference" and "pallas" and run
-    everything else on the numpy fast path.
+    The partitioner distinguishes "native"/"python" fast engines (plus
+    the sharded "dist" mode of `repro.dist`); the mapping and simulator
+    layers keep "reference" and "pallas" and run everything else on the
+    numpy fast path.
     """
-    if backend not in _PARTITIONER_BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; "
-                         f"choose from {_PARTITIONER_BACKENDS}")
+    if backend != "dist" and backend not in _PARTITIONER_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from "
+                         f"{_PARTITIONER_BACKENDS + ('dist',)}")
     return backend if backend in ("reference", "pallas") else "fast"
 
 

@@ -16,19 +16,91 @@ match and how tightly:
     (the equivalence tests assert exact equality where the oracle order
     is reproduced and rtol 1e-12 where a true reduction reorders, e.g.
     `jnp.sum` for total comm bytes).
+
+Compilation discipline
+----------------------
+The glue is **jitted end-to-end**, not dispatched op by op: each public
+function runs one or two `jax.jit` cores whose shapes are padded to
+powers of two (stream length, vertex count, pairwise base count), so
+novel graph shapes collapse onto a handful of cache entries instead of
+paying ~250 per-op dispatches (~5 s of compiles on jax CPU) before the
+cache warms.  Data-dependent output sizes (the deduped CSR length, the
+non-owner triple count) are computed host-side from cheap numpy
+bookkeeping and applied as static slices *outside* the traced cores,
+with in-core sentinels keeping padded elements out of every reduction
+(sentinel keys land in a slack bucket that is sliced off; padded values
+contribute `+0.0` after all real entries, which leaves float
+accumulation orders — and hence bit-identity — intact).
+
+Every traced core bumps a counter in `_TRACE_COUNTS` as a tracing side
+effect (Python runs only while jax traces, i.e. on a cache miss);
+`trace_count()` exposes it so tests can assert cache hits across
+same-bucket graphs — the probe that keeps this module honestly jitted.
 """
 from __future__ import annotations
 
+import collections
+import functools
+
 import numpy as np
 
-from .segsum import keyed_sum, require_pallas, segment_sum, with_x64
+from .segsum import (_next_pow2, keyed_sum, require_pallas, segment_sum,
+                     with_x64)
 
 try:
+    import jax
     import jax.numpy as jnp
 except Exception:                       # pragma: no cover - no jax in env
-    jnp = None
+    jax = jnp = None
 
-__all__ = ["replica_csr", "star_triples", "interaction_from_csr"]
+__all__ = ["replica_csr", "star_triples", "interaction_from_csr",
+           "trace_count"]
+
+_MIN_PAD = 8                            # floor for pow2-padded axes
+_TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def trace_count(name: "str | None" = None) -> int:
+    """Times the jitted cores have been *traced* (compiled), total or by
+    core name — the cache-hit probe used by the compile-count tests."""
+    if name is not None:
+        return _TRACE_COUNTS[name]
+    return sum(_TRACE_COUNTS.values())
+
+
+def _mark(name: str) -> None:
+    # executes only while jax traces the enclosing function: a cache
+    # hit never reaches this line
+    _TRACE_COUNTS[name] += 1
+
+
+def _pad_pow2(a: np.ndarray, fill, min_len: int = _MIN_PAD) -> np.ndarray:
+    n = max(_next_pow2(len(a)), min_len)
+    if n == len(a):
+        return a
+    out = np.full(n, fill, dtype=a.dtype)
+    out[:len(a)] = a
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# replica CSR
+# ---------------------------------------------------------------------- #
+if jax is not None:
+    @functools.partial(jax.jit, static_argnames=("pn", "p"))
+    def _csr_core(key, pn: int, p: int):
+        """Sorted-unique (vertex, cluster) keys with sentinel-padded
+        duplicates, plus searchsorted indptr over pn+1 boundaries."""
+        _mark("replica_csr")
+        sent = pn * p
+        key = jnp.sort(key)
+        dup = jnp.concatenate(
+            [jnp.zeros((1,), bool), key[1:] == key[:-1]])
+        key = jnp.sort(jnp.where(dup, sent, key))
+        count = jnp.searchsorted(key, sent)
+        bounds = jnp.arange(pn + 1, dtype=jnp.int64) * p
+        indptr = jnp.searchsorted(key, bounds)
+        return key % p, indptr, count
 
 
 @with_x64
@@ -40,38 +112,122 @@ def replica_csr(n: int, p: int, src, dst, assignment):
     (vertex, cluster) key set).
     """
     require_pallas()
-    v = jnp.concatenate([jnp.asarray(src), jnp.asarray(dst)]).astype(jnp.int64)
-    c = jnp.concatenate([jnp.asarray(assignment)] * 2).astype(jnp.int64)
-    key = jnp.sort(v * p + c)
-    if key.shape[0]:
-        keep = jnp.ones(key.shape, bool).at[1:].set(key[1:] != key[:-1])
-        key = key[keep]
-    indptr = jnp.searchsorted(key, jnp.arange(n + 1, dtype=jnp.int64) * p)
-    return indptr.astype(jnp.int64), (key % p).astype(jnp.int32)
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    a = np.asarray(assignment, dtype=np.int64)
+    pn = max(_next_pow2(n), _MIN_PAD)
+    key = np.concatenate([src.astype(np.int64) * p + a,
+                          dst.astype(np.int64) * p + a])
+    key = _pad_pow2(key, pn * p)
+    flat, indptr, count = _csr_core(jnp.asarray(key), pn, p)
+    k = int(count)
+    return indptr[:n + 1].astype(jnp.int64), flat[:k].astype(jnp.int32)
 
 
-def _segment_heads(indptr):
-    """(seg_id, first_pos) per flat CSR entry — device `segment_entries`."""
-    sizes = jnp.diff(indptr)
-    seg_id = jnp.repeat(jnp.arange(sizes.shape[0], dtype=jnp.int64), sizes)
-    return seg_id, indptr[seg_id]
+# ---------------------------------------------------------------------- #
+# star triples
+# ---------------------------------------------------------------------- #
+if jax is not None:
+    @functools.partial(jax.jit, static_argnames=("has_bytes",))
+    def _star_core(indptr, sizes, members, vb, m, has_bytes: bool):
+        """Compact (owner, replica, bytes) triples to the front.
+
+        Valid non-owner entries keep their stream order (stable argsort
+        on a 0/1 key), which is exactly the order the numpy boolean
+        mask emits — float comm accumulation order is preserved.
+        """
+        _mark("star_triples")
+        mp = members.shape[0]
+        seg_id = jnp.repeat(jnp.arange(sizes.shape[0], dtype=jnp.int64),
+                            sizes, total_repeat_length=mp)
+        first_pos = indptr[seg_id]
+        pos = jnp.arange(mp, dtype=jnp.int64)
+        non_owner = (pos != first_pos) & (pos < m)
+        order = jnp.argsort(jnp.where(non_owner, 0, 1), stable=True)
+        owners = members[first_pos][order]
+        replicas = members[order]
+        if has_bytes:
+            b = vb[seg_id][order]
+        else:
+            b = jnp.ones((mp,), jnp.float64)
+        return owners, replicas, b
+
+
+def _star_padded(indptr, members, vertex_bytes):
+    """(owners, replicas, b) padded device arrays + valid count K."""
+    ip = np.asarray(indptr, dtype=np.int64)
+    mem = np.asarray(members)
+    sizes = np.diff(ip)
+    k = len(mem) - int(np.count_nonzero(sizes))
+    pn = max(_next_pow2(len(sizes)), _MIN_PAD)
+    ip_pad = np.full(pn + 1, ip[-1] if len(ip) else 0, dtype=np.int64)
+    ip_pad[:len(ip)] = ip
+    sizes_pad = _pad_pow2(sizes.astype(np.int64), 0, pn)[:pn]
+    mem_pad = _pad_pow2(mem.astype(np.int64), 0)
+    has_bytes = vertex_bytes is not None
+    if has_bytes:
+        vb = _pad_pow2(np.asarray(vertex_bytes, dtype=np.float64), 0.0, pn)
+    else:
+        vb = np.zeros(1, np.float64)    # placeholder, untraced branch
+    owners, replicas, b = _star_core(
+        jnp.asarray(ip_pad), jnp.asarray(sizes_pad), jnp.asarray(mem_pad),
+        jnp.asarray(vb), len(mem), has_bytes)
+    return owners, replicas, b, k
 
 
 @with_x64
 def star_triples(indptr, members, vertex_bytes=None):
     """Device port of `_arrayops.star_triples` (owner, replica, bytes)."""
     require_pallas()
-    indptr = jnp.asarray(indptr)
-    members = jnp.asarray(members)
-    seg_id, first_pos = _segment_heads(indptr)
-    non_owner = jnp.arange(members.shape[0], dtype=jnp.int64) != first_pos
-    owners = members[first_pos[non_owner]]
-    replicas = members[non_owner]
-    if vertex_bytes is None:
-        b = jnp.ones(replicas.shape, jnp.float64)
-    else:
-        b = jnp.asarray(vertex_bytes, jnp.float64)[seg_id[non_owner]]
-    return owners, replicas, b
+    owners, replicas, b, k = _star_padded(indptr, members, vertex_bytes)
+    return owners[:k], replicas[:k], b[:k]
+
+
+# ---------------------------------------------------------------------- #
+# interaction graphs
+# ---------------------------------------------------------------------- #
+if jax is not None:
+    @functools.partial(jax.jit, static_argnames=("p",))
+    def _diag_core(members, m, p: int):
+        """Per-cluster reference counts (integer, order-free)."""
+        _mark("interaction_diag")
+        pos = jnp.arange(members.shape[0], dtype=jnp.int64)
+        key = jnp.where(pos < m, members, p)
+        return keyed_sum(key, jnp.ones(key.shape, jnp.int64), p + 1)[:p]
+
+    @functools.partial(jax.jit, static_argnames=("p",))
+    def _star_comm_core(owners, replicas, b, k, p: int):
+        """Symmetrised owner->replica comm matrix over p^2 keys.
+
+        Sentinel keys (p^2) absorb the padded tail; real entries keep
+        their order through `keyed_sum`'s stable sort, so the sums are
+        bit-identical to the numpy flat-scatter path.
+        """
+        _mark("interaction_star")
+        pos = jnp.arange(owners.shape[0], dtype=jnp.int64)
+        valid = pos < k
+        key = jnp.where(valid, owners * p + replicas, p * p)
+        bb = jnp.where(valid, b, 0.0)
+        sums = keyed_sum(key, bb, p * p + 1)[:p * p].reshape(p, p)
+        return sums + sums.T
+
+    @functools.partial(jax.jit, static_argnames=("s", "p"))
+    def _pair_keys_core(base, nb, members, s: int, p: int):
+        """x*p+y keys for all member pairs of the size-`s` segments."""
+        _mark("interaction_pairs")
+        iu, ju = np.triu_indices(s, k=1)
+        x = members[base[:, None] + jnp.asarray(iu)[None, :]]
+        y = members[base[:, None] + jnp.asarray(ju)[None, :]]
+        valid = (jnp.arange(base.shape[0]) < nb)[:, None]
+        return jnp.where(valid, x * p + y, p * p).ravel()
+
+    @functools.partial(jax.jit, static_argnames=("p",))
+    def _pair_count_core(keys, p: int):
+        """Pair-count matrix from sentinel-padded keys (integer sums)."""
+        _mark("interaction_pair_count")
+        cnt = segment_sum(jnp.ones(keys.shape, jnp.int64), jnp.sort(keys),
+                          p * p + 1)[:p * p]
+        return cnt.astype(jnp.float64).reshape(p, p)
 
 
 @with_x64
@@ -85,41 +241,43 @@ def interaction_from_csr(indptr, members, p: int, vertex_bytes=None,
     are bit-identical to the fast (and hence reference) backends.
     """
     require_pallas()
-    indptr = jnp.asarray(indptr)
-    mem = jnp.asarray(members).astype(jnp.int64)
-    if mem.shape[0] == 0:
+    ip = np.asarray(indptr, dtype=np.int64)
+    mem = np.asarray(members)
+    if len(mem) == 0:
         z = jnp.zeros((p, p), jnp.float64)
         return z, z
+
     # diagonal: vertices referencing each cluster (members unique per seg)
-    diag = keyed_sum(mem, jnp.ones(mem.shape, jnp.int64), p)
+    mem_pad = jnp.asarray(_pad_pow2(mem.astype(np.int64), 0))
+    diag = _diag_core(mem_pad, len(mem), p)
     shared = jnp.zeros((p, p), jnp.float64).at[
         jnp.arange(p), jnp.arange(p)].set(diag.astype(jnp.float64))
 
     # star comm: owner->replica sums over p^2 keys; owner != replica
     # always (the owner is the first sorted member), so M has an empty
     # diagonal and symmetrisation is exactly M + M.T
-    owners, replicas, b = star_triples(indptr, mem, vertex_bytes)
+    owners, replicas, b, k = _star_padded(ip, mem, vertex_bytes)
     comm = jnp.zeros((p, p), jnp.float64)
-    if owners.shape[0]:
-        sums = keyed_sum(owners * p + replicas, b, p * p).reshape(p, p)
-        comm = sums + sums.T
+    if k:
+        comm = _star_comm_core(owners, replicas, b, k, p)
 
     # capped pairwise shared counts, one size class at a time (same
-    # enumeration as the numpy path; x < y strictly, so S + S.T again)
-    sizes = jnp.diff(indptr)
+    # enumeration as the numpy path; x < y strictly, so S + S.T again);
+    # each (size, padded-base-count) pair compiles once and is reused
+    sizes = np.diff(ip)
+    mem_dev = jnp.asarray(mem.astype(np.int64))
     keys = []
-    for s in np.unique(np.asarray(sizes)):
+    for s in np.unique(sizes):
         s = int(s)
         if s < 2 or s > pairwise_cap:
             continue
-        base = indptr[:-1][sizes == s]
-        iu, ju = np.triu_indices(s, k=1)
-        x = mem[(base[:, None] + jnp.asarray(iu)[None, :]).ravel()]
-        y = mem[(base[:, None] + jnp.asarray(ju)[None, :]).ravel()]
-        keys.append(x * p + y)
+        base = ip[:-1][sizes == s]
+        keys.append(_pair_keys_core(
+            jnp.asarray(_pad_pow2(base, 0)), len(base), mem_dev, s, p))
     if keys:
-        k = jnp.concatenate(keys)
-        cnt = segment_sum(jnp.ones(k.shape, jnp.int64), jnp.sort(k), p * p)
-        pairs = cnt.astype(jnp.float64).reshape(p, p)
+        cap = max(_next_pow2(sum(kk.shape[0] for kk in keys)), _MIN_PAD)
+        pad = jnp.full((cap - sum(kk.shape[0] for kk in keys),), p * p,
+                       jnp.int64)
+        pairs = _pair_count_core(jnp.concatenate(keys + [pad]), p)
         shared = shared + pairs + pairs.T
     return comm, shared

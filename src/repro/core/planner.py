@@ -21,6 +21,7 @@ Three consumers inside the training/serving framework:
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -56,13 +57,27 @@ class PlanReport:
 
 def plan_graph(g, p: int, method: str = "wb_libra",
                lam: float = 1.0, machine: Machine | None = None,
-               backend: str = "fast") -> PlanReport:
+               backend: str = "fast", workers: int = 1,
+               merge_period: "int | None" = None) -> PlanReport:
     """Plan `g` — an `IRGraph`, or a path to an `.npz` snapshot / NDJSON
     dynamic trace (the `repro.trace` front end).  `backend` threads
     through every stage ("fast"/"native"/"python"/"pallas"/"reference");
-    "pallas" keeps the finalize/metrics reductions on-accelerator."""
-    g = coerce_graph(g)
-    cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
+    "pallas" keeps the finalize/metrics reductions on-accelerator, and
+    "dist" runs the sharded streaming partitioner (`repro.dist`) on
+    `workers` workers, ingesting trace paths through the parallel parse
+    front end (`workers=1` is bit-identical to "fast")."""
+    if backend == "dist":
+        if isinstance(g, (str, os.PathLike)) \
+                and not os.fspath(g).endswith(".npz"):
+            from ..dist import dist_ingest
+            g = dist_ingest(g, workers=workers)
+        g = coerce_graph(g)
+        from ..dist import dist_vertex_cut
+        cut = dist_vertex_cut(g, p, method=method, lam=lam,
+                              workers=workers, merge_period=merge_period)
+    else:
+        g = coerce_graph(g)
+        cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
     map_backend = resolve_mapping_backend(backend)
     comm, shared = cluster_interaction_graphs(cut, p, vertex_bytes_model(g),
                                               backend=map_backend)

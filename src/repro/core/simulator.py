@@ -257,7 +257,8 @@ def coerce_graph(g) -> IRGraph:
 
 def run_pipeline(g, p: int, method: str, lam: float = 1.0,
                  machine: Machine | None = None, seed: int = 0,
-                 backend: str = "fast"):
+                 backend: str = "fast", workers: int = 1,
+                 merge_period: "int | None" = None):
     """partition -> map -> simulate, returning (partition, mapping, report).
 
     The end-to-end path of Fig. 1: structure analysis is already in `g`
@@ -265,22 +266,36 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
     trace), vertex/edge cut produces clusters, the memory-centric mapping
     schedules them, and the simulator scores the result.  `backend`
     selects the engine for every stage: the partitioner accepts any of
-    its backends ("fast"/"native"/"python"/"pallas"/"reference"); the
-    mapping and simulator run their reference oracle iff
-    `backend == "reference"` and the Pallas segment-sum layer iff
-    `backend == "pallas"` (interpret mode on CPU — see README Backends).
+    its backends ("fast"/"native"/"python"/"pallas"/"reference") plus
+    "dist" — the sharded streaming partitioner of `repro.dist`, which
+    ingests trace paths through the parallel parse front end and runs
+    the cut on `workers` shard workers merging every `merge_period`
+    edges (`workers=1` is bit-identical to "fast").  The mapping and
+    simulator run their reference oracle iff `backend == "reference"`
+    and the Pallas segment-sum layer iff `backend == "pallas"`
+    (interpret mode on CPU — see README Backends).
     """
     from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
     from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut
     from .mapping import memory_centric_mapping
 
+    if backend == "dist" and isinstance(g, (str, os.PathLike)) \
+            and not os.fspath(g).endswith(".npz"):
+        from ..dist import dist_ingest
+        g = dist_ingest(g, workers=workers)
     g = coerce_graph(g)
 
     machine = machine or Machine.for_clusters(p)
     map_backend = resolve_mapping_backend(backend)
     if method in ALGORITHMS:
-        part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
-                           backend=backend)
+        if backend == "dist":
+            from ..dist import dist_vertex_cut
+            part = dist_vertex_cut(g, p, method=method, lam=lam, seed=seed,
+                                   workers=workers,
+                                   merge_period=merge_period)
+        else:
+            part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
+                               backend=backend)
         comm, shared = cluster_interaction_graphs(
             part, p, vertex_bytes_model(g), backend=map_backend)
         mapping = memory_centric_mapping(comm, shared, machine,

@@ -62,7 +62,7 @@ from ._native import native_available, native_engine
 from .graph import IRGraph
 
 __all__ = ["VertexCutResult", "vertex_cut", "ALGORITHMS", "BACKENDS",
-           "resolve_backend"]
+           "resolve_backend", "ShardCutState"]
 
 ALGORITHMS = ("random", "pg", "libra", "w_pg", "wb_pg", "w_libra", "wb_libra")
 BACKENDS = ("fast", "native", "python", "pallas", "reference")
@@ -167,6 +167,89 @@ class VertexCutResult:
             "edge_weight_imbalance": round(self.edge_weight_imbalance, 6),
             "edge_count_imbalance": round(self.edge_count_imbalance, 6),
         }
+
+
+# ---------------------------------------------------------------------- #
+# resumable shard state (the repro.dist worker building block)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ShardCutState:
+    """Resumable greedy-stream state for one shard of the edge stream.
+
+    Wraps exactly the flat buffers the fast engines mutate — loads,
+    bitmask limb rows, remaining degrees — so a stream can be run in
+    chunks: streaming a shard through repeated `stream_chunk` calls is
+    bit-identical to one uninterrupted `_stream_fast` pass (the engines
+    are pure functions of this state; the lazy heap is only an argmin
+    accelerator rebuilt per call).  `repro.dist` runs one state per
+    worker and periodically installs a merged near-global snapshot with
+    `adopt` (PowerGraph-style oblivious mode; see
+    `_arrayops.merge_limb_masks` / `merge_deltas`).
+    """
+
+    p: int
+    limbs: int
+    bound: float
+    rule_pg: int                    # 0 = Libra rule (pre-swapped), 1 = PG
+    engine: str                     # "native" or "python"
+    loads: np.ndarray               # float64[p] — local near-global view
+    masks: np.ndarray               # uint64[n*limbs] — A(v) limb rows
+    rem: np.ndarray                 # int64[n] — remaining-degree view
+    fresh: bool = True              # all-zero state (Case-4 batch eligible)
+
+    @classmethod
+    def create(cls, n: int, p: int, deg: np.ndarray, bound: float,
+               libra_rule: bool, backend: str = "fast") -> "ShardCutState":
+        """Fresh all-zero shard state for an n-vertex graph."""
+        engine = resolve_backend(backend)
+        if engine not in ("native", "python"):
+            raise ValueError(
+                f"shard streaming runs on the fast engines only, not "
+                f"{backend!r} (the greedy stream is inherently sequential)")
+        if engine == "native" and native_engine() is None:
+            raise RuntimeError(
+                "native backend requested but no C compiler is available "
+                "(or REPRO_NO_NATIVE is set); use backend='fast'")
+        limbs = (p + 63) // 64
+        return cls(p=p, limbs=limbs, bound=bound,
+                   rule_pg=0 if libra_rule else 1, engine=engine,
+                   loads=np.zeros(p, dtype=np.float64),
+                   masks=np.zeros(n * limbs, dtype=np.uint64),
+                   rem=deg.astype(np.int64, copy=True))
+
+    def stream_chunk(self, su: np.ndarray, sv: np.ndarray, w: np.ndarray,
+                     out: np.ndarray) -> None:
+        """Stream one contiguous chunk of (pre-swapped) edges.
+
+        Mutates this state in place and writes cluster ids into `out`
+        (a view over the chunk's slice of the stream-order output).
+        The batched Case-4 seeding applies only while the state is
+        fresh — exactly when `_stream_fast` would apply it.
+        """
+        m = len(su)
+        if m == 0:
+            return
+        start = 0
+        if self.fresh:
+            start = _seed_case4(su, sv, w, self.p, self.loads, self.masks,
+                                self.rem, out, self.limbs, bool(self.rule_pg))
+            self.fresh = False
+        if self.engine == "native":
+            native_engine()(start, m, su, sv, w, self.p, self.rule_pg,
+                            self.bound, self.loads, self.masks, self.limbs,
+                            self.rem, out)
+        else:
+            _stream_python(start, m, su, sv, w, self.p, self.rule_pg,
+                           self.bound, self.loads, self.masks, self.limbs,
+                           self.rem, out, writeback=True)
+
+    def adopt(self, loads: np.ndarray, rem: np.ndarray,
+              masks: np.ndarray) -> None:
+        """Install a merged near-global snapshot (the merge hook)."""
+        np.copyto(self.loads, loads)
+        np.copyto(self.rem, rem)
+        np.copyto(self.masks, masks)
+        self.fresh = False
 
 
 # ---------------------------------------------------------------------- #
@@ -451,7 +534,8 @@ def _seed_case4(su: np.ndarray, sv: np.ndarray, w: np.ndarray, p: int,
 def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
                    w_a: np.ndarray, p: int, rule_pg: int, bound: float,
                    loads_a: np.ndarray, masks: np.ndarray, limbs: int,
-                   rem_a: np.ndarray, out: np.ndarray) -> None:
+                   rem_a: np.ndarray, out: np.ndarray,
+                   writeback: bool = False) -> None:
     """Pure-Python fast engine (fallback when the C kernel is absent).
 
     Same decisions as the reference loop, with the structural costs
@@ -461,11 +545,18 @@ def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
     entry is a stale lower bound refreshed when it surfaces — valid
     because loads only grow) instead of one heap push per edge into an
     ever-growing heap.
+
+    With `writeback=True` the final loads / remaining degrees / replica
+    bitmasks are re-encoded into the caller's arrays so the stream is
+    resumable (`ShardCutState.stream_chunk`); the one-shot `_stream_fast`
+    path skips that O(n) epilogue because only `out` is consumed.
     """
     n = len(rem_a)
     loads = loads_a.tolist()
     A: list = [None] * n
-    if start:
+    if start or masks.any():
+        # decode existing replica bitmasks: present after the batched
+        # Case-4 seeding, and on every resumed ShardCutState chunk
         rows = masks.reshape(n, limbs)
         for v in np.flatnonzero(rows.any(axis=1)).tolist():
             # '<u8' pins the limb layout so the decode also holds on
@@ -566,6 +657,18 @@ def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
         i += 1
 
     out[start:] = res
+    if writeback:
+        loads_a[:] = loads
+        rem_a[:] = rem
+        rows = masks.reshape(n, limbs)
+        nbytes = limbs * 8
+        for v, a in enumerate(A):
+            if a:
+                x = 0
+                for c in a:
+                    x |= 1 << c
+                rows[v] = np.frombuffer(x.to_bytes(nbytes, "little"),
+                                        dtype="<u8")
 
 
 def _finalize(g: IRGraph, method: str, p: int, lam: float,

@@ -1,0 +1,30 @@
+"""Distributed sharded streaming partitioner (parallel parse -> workers
+-> periodic merge).
+
+The scale-out front end for the vertex-cut framework: NDJSON dynamic
+traces are parsed over W byte-range shards in parallel (`parse.py`,
+with cross-shard def-table resolution at a cheap sequential merge), and
+the greedy streaming cut runs on W per-shard workers whose replica/load
+views are periodically merged PowerGraph-oblivious style (`engine.py`,
+built on `core.vertex_cut.ShardCutState`).
+
+Contract: `workers=1` is bit-identical to the single-stream fast
+engine; `workers>1` is deterministic for a fixed (W, seed,
+merge_period) and its cut quality is gated in the `dist_scaling`
+benchmark.  Consumed through `run_pipeline(..., backend="dist",
+workers=W)`, `plan_graph`, the `repro.trace` CLI (`--workers`), or
+directly:
+
+    from repro.dist import dist_ingest, dist_vertex_cut
+    g = dist_ingest("trace.ndjson", workers=4)
+    cut = dist_vertex_cut(g, p=64, workers=4)
+"""
+from .engine import DEFAULT_MERGE_PERIOD, dist_vertex_cut, shard_bounds
+from .parse import (ShardParse, dist_ingest, dist_ingest_with_stats,
+                    shard_byte_ranges)
+
+__all__ = [
+    "DEFAULT_MERGE_PERIOD", "dist_vertex_cut", "shard_bounds",
+    "ShardParse", "dist_ingest", "dist_ingest_with_stats",
+    "shard_byte_ranges",
+]

@@ -1,0 +1,178 @@
+"""Sharded streaming vertex-cut engine (per-shard workers + merges).
+
+The greedy streaming cut is inherently sequential *within* a stream,
+but PowerGraph-style oblivious placement is shard-local by
+construction: each worker places its slice of the edge stream against
+its own replica/load view, and views are periodically reconciled so
+placement happens against near-global state.  Concretely:
+
+  * the (possibly permuted) edge stream is split into W contiguous
+    shards; each worker owns a `ShardCutState` — the same flat buffers
+    the fast engines mutate (loads, bitmask limb rows, remaining
+    degrees), created per shard;
+  * workers stream `merge_period` edges per round (the C kernel runs
+    with the GIL released, so rounds execute in parallel threads);
+  * at every round barrier the shard states are merged — replica limb
+    rows by bitwise OR, loads / remaining degrees by delta reduction
+    against the round's snapshot (`_arrayops.merge_limb_masks` /
+    `merge_deltas`) — and the merged snapshot is installed back into
+    every shard (the paper lineage's "oblivious greedy" mode);
+  * the final assignment is finalized by the standard `_finalize`, so
+    the result is an ordinary `VertexCutResult` the mapping/simulator/
+    planner layers consume unchanged.
+
+Determinism contract: the output is a pure function of
+(graph, p, method, lam, seed, edge_order, workers, merge_period) —
+merges happen at fixed edge counts in fixed shard order, so thread
+scheduling cannot influence the result.  `workers=1` runs the single
+shard through the identical chunked engine path and is bit-identical
+to `vertex_cut(..., backend="fast")` (asserted in tests and gated in
+the `dist_scaling` bench).
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from ..core.vertex_cut import (ALGORITHMS, ShardCutState, VertexCutResult,
+                               _finalize, vertex_cut)
+from ..core._arrayops import merge_deltas, merge_limb_masks
+
+__all__ = ["dist_vertex_cut", "DEFAULT_MERGE_PERIOD", "shard_bounds"]
+
+DEFAULT_MERGE_PERIOD = 1 << 16
+
+
+def shard_bounds(m: int, workers: int) -> "list[int]":
+    """Contiguous stream slice boundaries: W+1 offsets over m edges."""
+    workers = max(1, min(int(workers), max(1, m)))
+    return [m * s // workers for s in range(workers + 1)]
+
+
+def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
+                    seed: int = 0, edge_order: str = "auto",
+                    workers: int = 1,
+                    merge_period: "int | None" = None,
+                    backend: str = "fast") -> VertexCutResult:
+    """Partition `g`'s edges into `p` clusters on W sharded workers.
+
+    Args:
+      g: `IRGraph`, or a path (`.npz` snapshot / NDJSON trace — traces
+        are ingested through the parallel sharded parse front end with
+        the same worker count).
+      workers: shard count W.  1 reproduces `backend="fast"` bit for
+        bit; W > 1 is deterministic for fixed (W, seed, merge_period).
+      merge_period: edges each worker streams between merge barriers
+        (default `DEFAULT_MERGE_PERIOD`); smaller tracks global state
+        more closely (better quality, more merge overhead).
+      backend: fast-engine selector for the workers ("fast", "native",
+        "python").  The greedy stream never runs on "reference"/"pallas"
+        — use `vertex_cut` for those.
+
+    Everything else matches `vertex_cut`.
+    """
+    if isinstance(g, (str, os.PathLike)):
+        path = os.fspath(g)
+        if path.endswith(".npz"):
+            from ..core.graph import IRGraph
+            g = IRGraph.load_npz(path)
+        else:
+            from .parse import dist_ingest
+            g = dist_ingest(path, workers=workers)
+    if method not in ALGORITHMS:
+        raise ValueError(f"unknown method {method!r}; choose from {ALGORITHMS}")
+    if p < 1:
+        raise ValueError("p must be >= 1")
+    if lam < 1.0:
+        raise ValueError("lambda must be >= 1 (paper Eq. 3)")
+    if merge_period is None:
+        merge_period = DEFAULT_MERGE_PERIOD
+    if merge_period < 1:
+        raise ValueError("merge_period must be >= 1")
+    workers = max(1, int(workers))
+
+    if method == "random":
+        # no streaming state to shard; identical to the fast engine
+        return vertex_cut(g, p, method=method, lam=lam, seed=seed,
+                          edge_order=edge_order, backend="fast")
+
+    m = g.num_edges
+    weighted = method in ("w_pg", "wb_pg", "w_libra", "wb_libra")
+    balanced = method in ("wb_pg", "wb_libra")
+    libra_rule = method in ("libra", "w_libra", "wb_libra")
+    if weighted and m and float(g.w.min()) < 0:
+        raise ValueError("edge weights must be >= 0 for the greedy cuts")
+
+    # stream-order selection: must mirror vertex_cut exactly (same rng
+    # construction) so workers=1 sees the identical stream
+    rng = np.random.default_rng(seed)
+    if edge_order == "auto":
+        edge_order = "trace" if balanced else "shuffled"
+    if edge_order == "shuffled":
+        perm = rng.permutation(m)
+    elif edge_order == "trace":
+        perm = np.arange(m)
+    else:
+        raise ValueError("edge_order must be 'shuffled', 'trace' or 'auto'")
+
+    src = g.src[perm]
+    dst = g.dst[perm]
+    w = g.w[perm] if weighted else np.ones(m)
+    w = np.ascontiguousarray(w, dtype=np.float64)
+    deg = g.degrees()
+    total_load = float(w.sum())
+    bound = lam * total_load / p if balanced else float("inf")
+
+    if libra_rule:
+        swap = deg[src] > deg[dst]
+        su = np.ascontiguousarray(np.where(swap, dst, src), dtype=np.int32)
+        sv = np.ascontiguousarray(np.where(swap, src, dst), dtype=np.int32)
+    else:
+        su = np.ascontiguousarray(src, dtype=np.int32)
+        sv = np.ascontiguousarray(dst, dtype=np.int32)
+
+    bounds = shard_bounds(m, workers)
+    nshards = len(bounds) - 1
+    out = np.empty(m, dtype=np.int32)
+    states = [ShardCutState.create(g.n, p, deg, bound, libra_rule, backend)
+              for _ in range(nshards)]
+
+    if nshards == 1:
+        # single shard: the chunked resumable path is bit-identical to
+        # one uninterrupted _stream_fast pass (no merges to run)
+        st = states[0]
+        for a in range(0, m, merge_period):
+            b = min(a + merge_period, m)
+            st.stream_chunk(su[a:b], sv[a:b], w[a:b], out[a:b])
+    else:
+        shard_len = max(bounds[s + 1] - bounds[s] for s in range(nshards))
+        rounds = -(-shard_len // merge_period)
+        snapshot_loads = np.zeros(p, dtype=np.float64)
+        snapshot_rem = deg.astype(np.int64, copy=True)
+
+        def run_round(r: int, s: int) -> None:
+            a = bounds[s] + r * merge_period
+            b = min(a + merge_period, bounds[s + 1])
+            if a < b:
+                states[s].stream_chunk(su[a:b], sv[a:b], w[a:b], out[a:b])
+
+        with ThreadPoolExecutor(max_workers=nshards) as ex:
+            for r in range(rounds):
+                list(ex.map(lambda s, _r=r: run_round(_r, s),
+                            range(nshards)))
+                if r + 1 < rounds:
+                    loads = merge_deltas(snapshot_loads,
+                                         [st.loads for st in states])
+                    rem = merge_deltas(snapshot_rem,
+                                       [st.rem for st in states])
+                    masks = merge_limb_masks([st.masks for st in states])
+                    for st in states:
+                        st.adopt(loads, rem, masks)
+                    snapshot_loads = loads
+                    snapshot_rem = rem
+
+    assignment = np.empty(m, dtype=np.int32)
+    assignment[perm] = out
+    return _finalize(g, method, p, lam, assignment, "fast")

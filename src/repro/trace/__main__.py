@@ -26,7 +26,7 @@ from .weights import WEIGHT_MODELS
 
 def _add_ingest_args(sp) -> None:
     sp.add_argument("trace",
-                    help="NDJSON trace file (a .gz path is gzip-"
+                    help="NDJSON trace file (.gz / .zst paths are "
                          "decompressed transparently; no flag needed)")
     sp.add_argument("--weight-model", default="bytes",
                     choices=sorted(WEIGHT_MODELS))
@@ -40,6 +40,10 @@ def _add_ingest_args(sp) -> None:
                          "it along the CFG's path records")
     sp.add_argument("--repeat", type=int, default=1,
                     help="replay each path this many times")
+    sp.add_argument("--workers", type=int, default=1,
+                    help="parse (and for `partition`, also cut) the trace "
+                         "on this many sharded workers (repro.dist); 1 = "
+                         "the sequential streaming ingester")
 
 
 def _ingest(args, keep_labels: bool = False):
@@ -49,6 +53,10 @@ def _ingest(args, keep_labels: bool = False):
         if args.cfg is None:
             sys.exit("--replay needs --cfg (path records)")
         return replay_trace(args.trace, args.cfg, repeat=args.repeat, **kw)
+    if args.workers > 1:
+        from ..dist import dist_ingest_with_stats
+        return dist_ingest_with_stats(args.trace, workers=args.workers,
+                                      cfg=args.cfg, **kw)
     return ingest_trace_with_stats(args.trace, cfg=args.cfg, **kw)
 
 
@@ -70,7 +78,8 @@ def main(argv=None) -> int:
     sp.add_argument("-p", "--clusters", type=int, default=8)
     sp.add_argument("--method", default="wb_libra")
     sp.add_argument("--lam", type=float, default=1.0)
-    sp.add_argument("--backend", default="fast")
+    sp.add_argument("--backend", default="fast",
+                    help="pipeline backend; --workers > 1 implies 'dist'")
 
     sp = sub.add_parser("record",
                         help="write a JAX demo program's trace as NDJSON")
@@ -98,8 +107,10 @@ def main(argv=None) -> int:
     elif args.cmd == "partition":
         from ..core.planner import plan_graph
         g, _ = _ingest(args)
+        backend = "dist" if args.workers > 1 else args.backend
         report = plan_graph(g, args.clusters, method=args.method,
-                            lam=args.lam, backend=args.backend)
+                            lam=args.lam, backend=backend,
+                            workers=args.workers)
         print(json.dumps(report.summary(), indent=2, default=float))
     elif args.cmd == "record":
         fn, fargs = demo_program(args.program)

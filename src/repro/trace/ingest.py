@@ -86,18 +86,43 @@ def _open_lines(source):
 
     A `.gz` path is decompressed transparently (instrumentation runs
     usually gzip their NDJSON streams on the fly; text-mode `gzip.open`
-    streams line-by-line, so the O(chunk) memory bound still holds).
-    Lines are passed through raw — `json.loads` tolerates surrounding
-    whitespace, and blank lines are dropped in `parse_line`'s error path,
-    so the hot loop never strips."""
+    streams line-by-line, so the O(chunk) memory bound still holds), and
+    a `.zst`/`.zstd` path likewise through the optional `zstandard`
+    package (`pip install repro[zstd]`) — zstd is what long-running
+    instrumentation favours for its compression speed.  Lines are passed
+    through raw — `json.loads` tolerates surrounding whitespace, and
+    blank lines are dropped in `parse_line`'s error path, so the hot
+    loop never strips."""
     if isinstance(source, (str, os.PathLike)):
-        if os.fspath(source).endswith(".gz"):
+        path = os.fspath(source)
+        if path.endswith(".gz"):
             import gzip
             f = gzip.open(source, "rt", encoding="utf-8")
+        elif path.endswith((".zst", ".zstd")):
+            f = _open_zstd(source)
         else:
             f = open(source, "r", encoding="utf-8")
         return f, f.close
     return source, (lambda: None)
+
+
+def _open_zstd(source):
+    """Text-mode streaming reader over a zstd-compressed path.
+
+    Soft dependency: `zstandard` is only imported when a `.zst` path is
+    actually opened, so the core package stays dependency-free."""
+    try:
+        import zstandard
+    except ImportError as e:                # pragma: no cover - soft dep
+        raise ImportError(
+            "reading .zst/.zstd traces needs the optional 'zstandard' "
+            "package (pip install zstandard, or repro[zstd])") from e
+    import io
+    fh = open(source, "rb")
+    reader = zstandard.ZstdDecompressor().stream_reader(fh)
+    # closefd semantics: closing the text wrapper closes the stream
+    # reader, which closes the underlying file handle
+    return io.TextIOWrapper(reader, encoding="utf-8")
 
 
 def _source_name(source, name):
@@ -199,7 +224,14 @@ class _StreamBuilder:
     def add_record(self, lineno: int, rec: dict) -> bool:
         """Validate + apply one instruction record (atomically: a record
         rejected under on_error='skip' leaves no vertices, edges, or
-        def-table entries behind)."""
+        def-table entries behind).
+
+        The validation/ordering prologue and the def registration are
+        shared with the sharded parser (`repro.dist`), which subclasses
+        this builder and overrides only `_add_use_edges` — keeping the
+        dist-vs-sequential equality contract mechanical rather than a
+        matter of two hand-synced copies of this hot loop.
+        """
         op = rec.get("op")
         if type(op) is not str:
             return self._fail(lineno, "missing/non-string 'op'")
@@ -286,33 +318,7 @@ class _StreamBuilder:
         if self.labels is not None:
             self.labels.append(op)
         if uses:
-            defs_get = self.defs.get
-            weight_fn = self.weight_fn
-            src_append = self._src.append
-            dst_append = self._dst.append
-            w_append = self._w.append
-            labels = self.labels
-            for i, u in enumerate(uses):
-                entry = defs_get(u)
-                if entry is not None:
-                    pid, pbytes = entry
-                elif u.startswith("const:"):
-                    pid, pbytes = n, None
-                    n += 1
-                    self._const_uses += 1
-                    if labels is not None:
-                        labels.append("const")
-                else:
-                    pid, pbytes = n, None
-                    n += 1
-                    self.defs[u] = (pid, None)
-                    self._livein_uses += 1
-                    if labels is not None:
-                        labels.append(u)
-                src_append(pid)
-                dst_append(nid)
-                w_append(weight_fn(
-                    op, use_tys[i] if use_tys is not None else None, pbytes))
+            n = self._add_use_edges(nid, n, op, uses, use_tys)
         self.n = n
         if len(self._src) >= self.chunk_edges:
             self._flush()
@@ -324,6 +330,40 @@ class _StreamBuilder:
             self.defs[def_id] = (
                 nid, type_bytes(def_ty) if type(def_ty) is str else None)
         return True
+
+    def _add_use_edges(self, nid: int, n: int, op: str, uses,
+                       use_tys) -> int:
+        """Operand scan: intern each use, append its edge, return the
+        next fresh vertex id.  The single override point of the sharded
+        parser (`repro.dist.parse._ShardBuilder`)."""
+        defs_get = self.defs.get
+        weight_fn = self.weight_fn
+        src_append = self._src.append
+        dst_append = self._dst.append
+        w_append = self._w.append
+        labels = self.labels
+        for i, u in enumerate(uses):
+            entry = defs_get(u)
+            if entry is not None:
+                pid, pbytes = entry
+            elif u.startswith("const:"):
+                pid, pbytes = n, None
+                n += 1
+                self._const_uses += 1
+                if labels is not None:
+                    labels.append("const")
+            else:
+                pid, pbytes = n, None
+                n += 1
+                self.defs[u] = (pid, None)
+                self._livein_uses += 1
+                if labels is not None:
+                    labels.append(u)
+            src_append(pid)
+            dst_append(nid)
+            w_append(weight_fn(
+                op, use_tys[i] if use_tys is not None else None, pbytes))
+        return n
 
     def finalize(self, name: str):
         self._flush()

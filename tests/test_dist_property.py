@@ -1,0 +1,128 @@
+"""Hypothesis suite for the shard determinism contract (`repro.dist`).
+
+Property-based versions of the distributed partitioner's contract:
+`workers=1` bit-identity against the single-stream engine, fixed
+(W, seed, merge_period) reproducibility across runs, and sharded-parse
+equality against the sequential ingester — including a round trip
+through a gzip-compressed `.ndjson.gz` trace.
+"""
+import gzip
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the [test] extra: pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import IRGraph, vertex_cut  # noqa: E402
+from repro.dist import dist_ingest_with_stats, dist_vertex_cut  # noqa: E402
+from repro.trace import ingest_trace_with_stats  # noqa: E402
+
+
+@st.composite
+def small_graphs(draw):
+    n = draw(st.integers(min_value=2, max_value=60))
+    m = draw(st.integers(min_value=1, max_value=200))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    w = draw(st.lists(st.floats(0.1, 100.0), min_size=m, max_size=m))
+    return IRGraph(n=n, src=np.array(src), dst=np.array(dst),
+                   w=np.array(w), name="hyp")
+
+
+@st.composite
+def small_traces(draw):
+    """NDJSON instruction lines over a small value-id space, so shard
+    boundaries routinely split def/use pairs (the pending machinery)."""
+    n_fns = draw(st.integers(1, 3))
+    n_lines = draw(st.integers(1, 120))
+    lines = []
+    for i in range(n_lines):
+        fn = f"fn{draw(st.integers(0, n_fns - 1))}"
+        uses = draw(st.lists(
+            st.one_of(st.sampled_from([f"v{k}" for k in range(12)]),
+                      st.sampled_from(["const:i32:1", "const:i32:7"])),
+            min_size=0, max_size=3))
+        rec = {"fn": fn, "bb": f"bb{draw(st.integers(0, 2))}",
+               "op": draw(st.sampled_from(["add", "load", "store", "mul"])),
+               "uses": uses,
+               "def": (f"v{draw(st.integers(0, 11))}"
+                       if draw(st.booleans()) else None)}
+        if draw(st.booleans()):
+            rec["def_ty"] = draw(st.sampled_from(
+                ["i32", "i64", "double", "<4 x float>"]))
+        lines.append(json.dumps(rec))
+    return "\n".join(lines) + "\n"
+
+
+@given(g=small_graphs(), p=st.integers(2, 16),
+       method=st.sampled_from(["pg", "libra", "w_pg", "wb_pg",
+                               "w_libra", "wb_libra"]),
+       seed=st.integers(0, 5),
+       merge_period=st.sampled_from([7, 64, 1 << 16]))
+@settings(max_examples=50, deadline=None)
+def test_workers1_bit_identity(g, p, method, seed, merge_period):
+    ref = vertex_cut(g, p, method=method, seed=seed, backend="fast")
+    got = dist_vertex_cut(g, p, method=method, seed=seed, workers=1,
+                          merge_period=merge_period)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.replication_factor == ref.replication_factor
+    np.testing.assert_array_equal(got.loads, ref.loads)
+
+
+@given(g=small_graphs(), p=st.integers(2, 12),
+       workers=st.integers(2, 5), seed=st.integers(0, 5),
+       merge_period=st.sampled_from([5, 33, 1024]))
+@settings(max_examples=40, deadline=None)
+def test_fixed_w_seed_reproducible(g, p, workers, seed, merge_period):
+    a = dist_vertex_cut(g, p, seed=seed, workers=workers,
+                        merge_period=merge_period)
+    b = dist_vertex_cut(g, p, seed=seed, workers=workers,
+                        merge_period=merge_period)
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    # still a valid cut
+    assert (a.assignment >= 0).all() and (a.assignment < p).all()
+    assert np.isclose(a.loads.sum(), g.total_weight)
+
+
+@given(text=small_traces(), workers=st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_sharded_parse_equals_sequential(tmp_path_factory, text, workers):
+    path = tmp_path_factory.mktemp("hyp") / "t.ndjson"
+    path.write_text(text)
+    g0, s0 = ingest_trace_with_stats(str(path))
+    g, s = dist_ingest_with_stats(str(path), workers=workers,
+                                  pool="serial")
+    assert g.n == g0.n
+    np.testing.assert_array_equal(g.src, g0.src)
+    np.testing.assert_array_equal(g.dst, g0.dst)
+    np.testing.assert_array_equal(g.w, g0.w)
+    d0, d1 = s0.summary(), s.summary()
+    d0.pop("peak_chunk_edges")
+    d1.pop("peak_chunk_edges")
+    assert d0 == d1
+
+
+@given(text=small_traces(), workers=st.integers(2, 4),
+       p=st.integers(2, 8), seed=st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_gzip_trace_reproducible(tmp_path_factory, text, workers, p, seed):
+    """Fixed-(W, seed) reproducibility from an ingested .ndjson.gz trace,
+    and parse equality against the sequential gzip path."""
+    d = tmp_path_factory.mktemp("hypgz")
+    gz = d / "t.ndjson.gz"
+    with gzip.open(gz, "wt", encoding="utf-8") as f:
+        f.write(text)
+    g0, _ = ingest_trace_with_stats(str(gz))
+    g, _ = dist_ingest_with_stats(str(gz), workers=workers, pool="serial")
+    np.testing.assert_array_equal(g.src, g0.src)
+    np.testing.assert_array_equal(g.w, g0.w)
+    if g.num_edges:
+        a = dist_vertex_cut(g, p, seed=seed, workers=workers,
+                            merge_period=16)
+        b = dist_vertex_cut(g0, p, seed=seed, workers=workers,
+                            merge_period=16)
+        np.testing.assert_array_equal(a.assignment, b.assignment)

@@ -1,0 +1,82 @@
+"""Compile-count probes for the jitted pallas metrics glue.
+
+The metrics layer pads every traced core to power-of-two shape buckets
+precisely so that novel graph shapes stop paying op-by-op compiles.
+These tests hold it to that: same-bucket inputs must be pure cache hits
+(zero new traces), probed through `metrics.trace_count()` — a counter
+bumped only while jax traces a core.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="pallas layer needs jax")
+
+from repro.core import synthesize_powerlaw_graph, vertex_cut  # noqa: E402
+from repro.core.mapping import cluster_interaction_graphs  # noqa: E402
+from repro.core.pallas import metrics, pallas_available  # noqa: E402
+from repro.core.simulator import vertex_bytes_model  # noqa: E402
+
+pytestmark = pytest.mark.skipif(
+    not pallas_available(), reason="pallas segment-sum layer unavailable")
+
+P = 16
+
+
+def test_replica_csr_cache_hits_across_same_bucket_graphs():
+    # n in (900, 950) shares the 1024 vertex bucket; edge counts land in
+    # the same padded stream bucket too
+    g1 = synthesize_powerlaw_graph(n=900, alpha=2.2, seed=0)
+    g2 = synthesize_powerlaw_graph(n=950, alpha=2.2, seed=7)
+    r1 = vertex_cut(g1, P, backend="pallas")        # warm the cache
+    before = metrics.trace_count("replica_csr")
+    assert before >= 1
+    r2 = vertex_cut(g2, P, backend="pallas")
+    assert metrics.trace_count("replica_csr") == before, \
+        "same-bucket graph re-traced replica_csr (padding regressed)"
+    # and the cached result still matches the numpy oracle
+    for g, r in ((g1, r1), (g2, r2)):
+        ref = vertex_cut(g, P, backend="fast")
+        np.testing.assert_array_equal(r.assignment, ref.assignment)
+        np.testing.assert_array_equal(r.replica_indptr, ref.replica_indptr)
+        np.testing.assert_array_equal(r.replica_flat, ref.replica_flat)
+        np.testing.assert_array_equal(r.loads, ref.loads)
+
+
+def test_star_and_interaction_cache_hits_on_repeat():
+    g = synthesize_powerlaw_graph(n=700, alpha=2.2, seed=3)
+    cut = vertex_cut(g, P, backend="pallas")
+    vb = vertex_bytes_model(g)
+    c1, s1 = cluster_interaction_graphs(cut, P, vb, backend="pallas")
+    before = metrics.trace_count()
+    c2, s2 = cluster_interaction_graphs(cut, P, vb, backend="pallas")
+    assert metrics.trace_count() == before, \
+        "identical interaction inputs re-traced a metrics core"
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # oracle equality (bit-identical contract of the pallas layer)
+    cf, sf = cluster_interaction_graphs(cut, P, vb, backend="fast")
+    np.testing.assert_array_equal(np.asarray(c1), cf)
+    np.testing.assert_array_equal(np.asarray(s1), sf)
+
+
+def test_star_triples_bucketed_cache():
+    g1 = synthesize_powerlaw_graph(n=500, alpha=2.2, seed=1)
+    g2 = synthesize_powerlaw_graph(n=480, alpha=2.2, seed=9)
+    cut1 = vertex_cut(g1, P, backend="fast")
+    cut2 = vertex_cut(g2, P, backend="fast")
+    metrics.star_triples(*cut1.replica_csr(),
+                         vertex_bytes_model(g1))     # warm
+    before = metrics.trace_count("star_triples")
+    o, r, b = metrics.star_triples(*cut2.replica_csr(),
+                                   vertex_bytes_model(g2))
+    assert metrics.trace_count("star_triples") == before
+    from repro.core._arrayops import star_triples as np_star
+    on, rn, bn = np_star(*cut2.replica_csr(), vertex_bytes_model(g2))
+    np.testing.assert_array_equal(np.asarray(o), on)
+    np.testing.assert_array_equal(np.asarray(r), rn)
+    np.testing.assert_array_equal(np.asarray(b), bn)
+
+
+def test_trace_count_monotone_and_queryable():
+    assert metrics.trace_count() >= metrics.trace_count("replica_csr") >= 0
+    assert metrics.trace_count("no_such_core") == 0
