@@ -245,8 +245,11 @@ def _simulate_edge_cut(g: IRGraph, r: EdgeCutResult,
 
 # ---------------------------------------------------------------------- #
 def coerce_graph(g) -> IRGraph:
-    """Accept an `IRGraph` or a path to one (.npz snapshot or an NDJSON
-    dynamic trace — see `repro.trace`); the whole pipeline takes either."""
+    """Accept an `IRGraph` or a path to one, in any serialization the
+    repo knows: an `.npz` snapshot, a `.rtb[.gz|.zst]` binary trace
+    container, or a TRACE_SCHEMA v0 NDJSON dynamic trace (plain or
+    compressed — see `repro.trace.load_graph` for the suffix dispatch).
+    The whole pipeline takes either an object or a path."""
     if isinstance(g, IRGraph):
         return g
     if isinstance(g, (str, os.PathLike)):

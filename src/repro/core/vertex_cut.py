@@ -245,7 +245,14 @@ class ShardCutState:
 
     def adopt(self, loads: np.ndarray, rem: np.ndarray,
               masks: np.ndarray) -> None:
-        """Install a merged near-global snapshot (the merge hook)."""
+        """Install a merged near-global snapshot (the merge hook).
+
+        `repro.dist.engine` calls this at every merge barrier after
+        reducing all shards' views (`merge_limb_masks` for replica
+        masks, `merge_deltas` for loads / remaining degrees); the shard
+        resumes streaming against the merged arrays.  Also clears
+        `fresh`, so Case-4 batch seeding never re-fires mid-stream.
+        """
         np.copyto(self.loads, loads)
         np.copyto(self.rem, rem)
         np.copyto(self.masks, masks)

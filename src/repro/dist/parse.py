@@ -386,6 +386,19 @@ def dist_ingest_with_stats(source, *, workers: int = 1,
         raise TypeError("dist ingestion shards a file path; got "
                         f"{type(source).__name__} (use ingest_trace for "
                         "file-like or iterable sources)")
+    from ..trace.binfmt import is_binary_trace_path, read_trace_bin
+    if is_binary_trace_path(source):
+        # .rtb containers are pre-chunked columnar arrays: there is no
+        # line splitting to parallelise, and the loaded graph is the
+        # conversion-time graph for any worker count by construction
+        if cfg is not None:
+            raise ValueError(
+                "cfg validation applies to NDJSON traces; a .rtb binary "
+                "trace is already a validated graph")
+        g, stats = read_trace_bin(source, keep_labels=keep_labels)
+        if name is not None:
+            g = dataclasses.replace(g, name=name)
+        return g, stats
     if pool not in POOLS:
         raise ValueError(f"unknown pool {pool!r}; choose from {POOLS}")
     workers = max(1, int(workers))

@@ -10,6 +10,17 @@ weights through pluggable models (`weights.py`), and writes the same
 schema back out from jaxpr traces (`record.py`) — giving a round-trip
 oracle against `core.jaxpr_graph.jaxpr_to_graph`.
 
+Two fast paths sit in front of the sequential interpreter (see
+docs/trace-format.md for the formats and guarantees):
+
+  * `scan.py` — a vectorized structural-index NDJSON scanner that
+    parses compact machine-written traces with numpy byte passes and
+    falls back to the sequential path on anything outside its subset
+    (disable with ``REPRO_TRACE_SCANNER=0``);
+  * `binfmt.py` — the `.rtb` binary columnar trace container v1 written
+    by ``python -m repro.trace convert``; `.rtb` paths are accepted
+    everywhere NDJSON paths are and load at memory speed.
+
 CLI: ``python -m repro.trace {inspect,convert,partition,record,synth}``.
 """
 from .schema import SCHEMA_VERSION, TraceFormatError, type_bytes
@@ -17,6 +28,10 @@ from .weights import (WEIGHT_MODELS, register_weight_model,
                       resolve_weight_model)
 from .ingest import (CFG, TraceStats, ingest_trace, ingest_trace_with_stats,
                      load_cfg, load_graph, replay_trace)
+from .binfmt import (BINARY_MAGIC, BINARY_VERSION, BinaryFormatError,
+                     is_binary_trace_path, iter_trace_bin_chunks,
+                     read_trace_bin, read_trace_bin_header, write_trace_bin)
+from .scan import SCANNER_ENV, scanner_enabled, try_scan_ingest
 from .record import (DEMO_PROGRAMS, demo_program, record_fn, record_graph,
                      record_jaxpr)
 from .synth import iter_synthetic_trace, synthesize_trace
@@ -26,6 +41,10 @@ __all__ = [
     "WEIGHT_MODELS", "register_weight_model", "resolve_weight_model",
     "CFG", "TraceStats", "ingest_trace", "ingest_trace_with_stats",
     "load_cfg", "load_graph", "replay_trace",
+    "BINARY_MAGIC", "BINARY_VERSION", "BinaryFormatError",
+    "is_binary_trace_path", "iter_trace_bin_chunks", "read_trace_bin",
+    "read_trace_bin_header", "write_trace_bin",
+    "SCANNER_ENV", "scanner_enabled", "try_scan_ingest",
     "DEMO_PROGRAMS", "demo_program", "record_fn", "record_graph",
     "record_jaxpr",
     "iter_synthetic_trace", "synthesize_trace",

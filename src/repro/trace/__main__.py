@@ -27,7 +27,8 @@ from .weights import WEIGHT_MODELS
 def _add_ingest_args(sp) -> None:
     sp.add_argument("trace",
                     help="NDJSON trace file (.gz / .zst paths are "
-                         "decompressed transparently; no flag needed)")
+                         "decompressed transparently; no flag needed) or "
+                         "a .rtb binary trace from `convert`")
     sp.add_argument("--weight-model", default="bytes",
                     choices=sorted(WEIGHT_MODELS))
     sp.add_argument("--on-error", default="raise",
@@ -68,9 +69,13 @@ def main(argv=None) -> int:
     sp = sub.add_parser("inspect", help="ingest + print stats JSON")
     _add_ingest_args(sp)
 
-    sp = sub.add_parser("convert", help="ingest + save .npz IRGraph")
+    sp = sub.add_parser("convert",
+                        help="ingest + save a .rtb binary trace or .npz "
+                             "IRGraph snapshot (picked by suffix)")
     _add_ingest_args(sp)
-    sp.add_argument("out", help="output .npz path")
+    sp.add_argument("out", help="output path: .rtb[.gz|.zst] writes the "
+                                "binary columnar trace container v1; "
+                                ".npz writes an IRGraph snapshot")
 
     sp = sub.add_parser("partition",
                         help="ingest + partition/map/simulate summary")
@@ -100,8 +105,12 @@ def main(argv=None) -> int:
         print(json.dumps({"stats": stats.summary(), "graph": g.stats()},
                          indent=2, default=float))
     elif args.cmd == "convert":
+        from .binfmt import is_binary_trace_path, write_trace_bin
         g, stats = _ingest(args)
-        g.save_npz(args.out)
+        if is_binary_trace_path(args.out):
+            write_trace_bin(args.out, g, stats)
+        else:
+            g.save_npz(args.out)
         print(f"wrote {args.out}: {g.num_vertices} vertices, "
               f"{g.num_edges} edges ({stats.records} records)")
     elif args.cmd == "partition":

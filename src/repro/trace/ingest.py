@@ -64,6 +64,10 @@ class TraceStats:
     peak_chunk_edges: int = 0   # high-water mark of the Python edge buffer
     functions: int = 0
     blocks: int = 0
+    # which ingestion engine produced the graph: "stream" (the Python
+    # record loop below), "scan" (the vectorized scanner, trace.scan),
+    # or "binary" (a .rtb container, trace.binfmt)
+    engine: str = "stream"
 
     def summary(self) -> dict:
         return dataclasses.asdict(self)
@@ -411,11 +415,42 @@ def ingest_trace_with_stats(source, *, weight_model="bytes",
       keep_labels: retain per-vertex opcode labels (O(n) strings; off by
         default so huge traces stay array-only).
 
+    Two transparent fast paths sit in front of the streaming
+    interpreter (docs/trace-format.md documents both):
+
+    * Binary `.rtb` paths (see `repro.trace.binfmt`) load directly —
+      `weight_model` is baked in at conversion time and ignored here,
+      and `cfg` validation is not applicable (the trace is already a
+      validated graph).
+    * Eligible NDJSON path sources run through the vectorized scanner
+      (`repro.trace.scan`), bit-identical to the interpreter; anything
+      outside its strict subset falls back whole-file, so results and
+      diagnostics never change.  `REPRO_TRACE_SCANNER=0` disables it.
+
+    `stats.engine` records which engine produced the graph ("stream",
+    "scan", or "binary").
+
     Returns:
       (IRGraph, TraceStats)
     """
+    from .binfmt import is_binary_trace_path, read_trace_bin
+    if is_binary_trace_path(source):
+        if cfg is not None:
+            raise ValueError(
+                "cfg validation applies to NDJSON traces; a .rtb binary "
+                "trace is already a validated graph")
+        g, stats = read_trace_bin(source, keep_labels=keep_labels)
+        if name is not None:
+            g = dataclasses.replace(g, name=name)
+        return g, stats
     if cfg is not None and not isinstance(cfg, CFG):
         cfg = load_cfg(cfg)
+    from .scan import try_scan_ingest
+    scanned = try_scan_ingest(source, weight_model=weight_model,
+                              on_error=on_error, cfg=cfg, name=name,
+                              keep_labels=keep_labels)
+    if scanned is not None:
+        return scanned
     b = _StreamBuilder(resolve_weight_model(weight_model), chunk_edges,
                        keep_labels, cfg, on_error)
     lines, close = _open_lines(source)
@@ -525,10 +560,13 @@ def load_cfg(source) -> CFG:
 
 
 def load_graph(source, **kw) -> IRGraph:
-    """Load an `IRGraph` from a path: `.npz` snapshots or NDJSON traces.
+    """Load an `IRGraph` from a path, whatever the serialization.
 
-    This is the dispatch behind `run_pipeline(path, ...)` — any keyword
-    accepted by `ingest_trace` passes through for trace sources.
+    Dispatches on suffix: `.npz` snapshots load via `IRGraph.load_npz`,
+    `.rtb` (+ `.gz`/`.zst`) binary traces via `repro.trace.binfmt`, and
+    everything else ingests as a TRACE_SCHEMA v0 NDJSON trace (any
+    keyword accepted by `ingest_trace` passes through).  This is the
+    dispatch behind `coerce_graph` / `run_pipeline(path, ...)`.
     """
     path = os.fspath(source)
     if path.endswith(".npz"):

@@ -205,6 +205,7 @@ def test_shard_bounds():
 def _stats_no_peak(stats):
     d = stats.summary()
     d.pop("peak_chunk_edges")       # per-shard buffer high-water mark
+    d.pop("engine")                 # provenance tag, not a semantic stat
     return d
 
 
@@ -219,7 +220,9 @@ def test_sharded_parse_matches_sequential(trace_path, workers, pool):
     np.testing.assert_array_equal(g.w, g0.w)
     assert _stats_no_peak(s) == _stats_no_peak(s0)
     if workers == 1:
-        assert s.summary() == s0.summary()   # single shard: exact stats
+        # single shard: exact stats up to provenance (engine + buffer
+        # high-water mark differ when the scanner handles the seq path)
+        assert _stats_no_peak(s) == _stats_no_peak(s0)
 
 
 def test_sharded_parse_gzip(trace_path, tmp_path):

@@ -1,0 +1,123 @@
+"""Docs gate: verify markdown links resolve and python blocks run.
+
+    python tools/check_docs.py README.md docs/*.md benchmarks/README.md
+
+Two checks per file:
+
+* every relative markdown link / image target exists on disk (external
+  http(s)/mailto links and pure #fragments are skipped — CI must not
+  flake on network);
+* every fenced ```python code block executes cleanly in a subprocess
+  with the repo on PYTHONPATH, from the repo root.  Blocks whose info
+  string contains ``no-run`` (e.g. ```python no-run) are skipped —
+  use that tag for illustrative snippets that reference files which
+  don't exist in a checkout.
+
+Exits 1 listing every broken link / failed block.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); target up to the first ')' or space
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^```(.*)$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _strip_code(text: str) -> str:
+    """Blank out fenced code blocks so their contents aren't link-checked."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            out.append("")
+        else:
+            out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    for m in _LINK.finditer(_strip_code(text)):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def _python_blocks(text: str):
+    """Yield (start_lineno, info_string, source) per ```python fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1).strip().split() and \
+                m.group(1).strip().split()[0] == "python":
+            info, start, body = m.group(1).strip(), i + 1, []
+            i += 1
+            while i < len(lines) and not _FENCE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            yield start, info, "\n".join(body)
+        elif m:                         # non-python fence: skip to close
+            i += 1
+            while i < len(lines) and not _FENCE.match(lines[i]):
+                i += 1
+        i += 1
+
+
+def check_blocks(path: str, text: str) -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for lineno, info, source in _python_blocks(text):
+        if "no-run" in info.split():
+            continue
+        proc = subprocess.run([sys.executable, "-c", source], cwd=REPO,
+                              env=env, capture_output=True, text=True,
+                              timeout=300)
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-3:]
+            errors.append(f"{path}:{lineno}: python block failed: "
+                          + " | ".join(tail))
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:])
+    if not paths:
+        print("usage: python tools/check_docs.py FILE.md [...]",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        errors += check_links(path, text)
+        errors += check_blocks(path, text)
+        print(f"checked {path}")
+    if errors:
+        print("\nDOCS GATE FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"\ndocs gate passed: {len(paths)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
