@@ -1,24 +1,35 @@
 """Distributed sharded partitioner: ingest+partition scaling over workers.
 
-End-to-end throughput of the `repro.dist` subsystem — parallel
-byte-sharded NDJSON parse followed by the W-worker sharded vertex cut —
-at W ∈ {1, 2, 4, 8} on a synthetic dynamic trace whose ingested graph
-matches the partitioner_scaling headline scale (>= 510k edges), plus a
-sequential `reference` row (plain streaming ingester + single-stream
-fast cut) that doubles as the host-speed calibration probe for
-`check_regression.py`.
+End-to-end throughput of the `repro.dist` subsystem at two scales:
+
+  * the 276k-line trace (>= 510k edges, the partitioner_scaling
+    headline scale) runs the classic two-phase path at W ∈ {1, 2, 4, 8}
+    plus a sequential `reference` row (plain streaming ingester +
+    single-stream fast cut) that doubles as the host-speed calibration
+    probe for `check_regression.py`;
+  * the 2.76M-line trace (~5.1M edges) is the scaling headline: trace
+    *paths* go straight into `dist_vertex_cut`, so W > 1 runs the
+    pipelined parse→cut dataflow (parse shards stream into resident
+    cut workers — no parse barrier) and W=1 is the two-phase wall the
+    speedups are measured against.
 
 Gates (`benchmarks/baselines/dist_scaling.json` + CI):
   * throughput per row (us_per_edge, calibrated geomean factor 2.0);
   * replication_factor per row — the W>1 cut is deterministic for a
     fixed (W, seed, merge_period), so any drift means the algorithm
     changed (quality factor 1.01);
-  * meta.speedup_w4 >= 2x on CI runners (--min-speedup 2.0): the
-    parallel front end must actually pay for itself at W=4.
+  * meta.speedup_w4 >= 3x at the 5.1M-edge scale, host-aware
+    (`--min-speedup 3.0 --speedup-cores 4`: the gate scales by
+    min(host_cores, 4)/4 with 20% slack, so a 1-core runner gates at
+    the 0.75 no-pathology floor while a 4-core runner must show real
+    scaling), and speedup_w8 must not fall below speedup_w4 (monotone
+    through W=8, asserted here on hosts with >= 8 cores).
 
 The W=1 bit-identity contract is asserted outright: same assignment as
 `vertex_cut(..., backend="fast")` on the ingested graph, hence the same
-replication factor.
+replication factor.  Per-round phase timings (parse-wait/cut/merge/
+finalize) of the big pipelined runs land in ``meta.timeline_w{4,8}``
+and ship with the CI artifact.
 """
 from __future__ import annotations
 
@@ -34,36 +45,55 @@ from .common import emit, timed_best, write_bench_json
 
 CACHE_DIR = ".cache/traces"
 LINES = 276_000          # ingests to >= 510k edges (partitioner headline)
+BIG_LINES = 2_760_000    # ~5.1M edges: the pipelined-scaling headline
 CUT_P = 64
 WORKERS = (1, 2, 4, 8)
+BIG_WORKERS = (1, 4, 8)
 MERGE_PERIOD = 1 << 16
 # best-of-N timing: the W=4/W=1 speedup is a wall-clock ratio gated in
 # CI, so one scheduler hiccup must not be able to sink (or inflate) it
 REPEATS = 2
+BIG_REPEATS = 1          # ~5.1M edges/run: one pass per W is plenty
+TIMELINE_ROUNDS = 32     # cap per-round detail shipped in the meta
 
 
-def _trace_path() -> str:
+def _trace_path(lines: int) -> str:
     os.makedirs(CACHE_DIR, exist_ok=True)
-    path = os.path.join(CACHE_DIR, f"synth_{LINES}_seed0.ndjson")
+    path = os.path.join(CACHE_DIR, f"synth_{lines}_seed0.ndjson")
     if not os.path.exists(path):
-        synthesize_trace(path, LINES, seed=0)
+        synthesize_trace(path, lines, seed=0)
     return path
 
 
-def _row(backend: str, workers: int, edges: int, us: float,
+def _row(lines: int, backend: str, workers: int, edges: int, us: float,
          rf: float) -> dict:
-    row = {"backend": backend, "workers": workers, "edges": edges,
+    row = {"lines": lines, "backend": backend, "workers": workers,
+           "edges": edges,
            "us_per_edge": round(us / max(edges, 1), 4),
            "us_total": round(us, 1),
            "edges_per_s": round(edges / (us / 1e6), 1),
            "replication_factor": round(rf, 4)}
-    emit(f"dist_scaling/W{workers}/{backend}", us,
+    emit(f"dist_scaling/L{lines}/W{workers}/{backend}", us,
          f"edges_per_s={row['edges_per_s']:.0f}")
     return row
 
 
+def _trim_timeline(tl: dict) -> dict:
+    """Meta-sized copy: phase totals always, per-round detail capped."""
+    rounds = tl.get("rounds") or []
+    out = {k: v for k, v in tl.items() if k != "rounds"}
+    out["n_rounds"] = len(rounds)
+    out["cut_us_total"] = round(sum(sum(r["cut_us"]) for r in rounds), 1)
+    out["merge_us_total"] = round(sum(r["merge_us"] for r in rounds), 1)
+    if rounds and "parse_wait_us" in rounds[0]:
+        out["parse_wait_us_total"] = round(
+            sum(r["parse_wait_us"] for r in rounds), 1)
+    out["rounds"] = rounds[:TIMELINE_ROUNDS]
+    return out
+
+
 def run() -> list[dict]:
-    path = _trace_path()
+    path = _trace_path(LINES)
     rows = []
 
     # sequential oracle + host calibration probe
@@ -72,10 +102,9 @@ def run() -> list[dict]:
         return g, vertex_cut(g, CUT_P, method="wb_libra", backend="fast")
 
     (g_ref, cut_ref), us_ref = timed_best(seq_pipeline, repeats=REPEATS)
-    rows.append(_row("reference", 1, g_ref.num_edges, us_ref,
+    rows.append(_row(LINES, "reference", 1, g_ref.num_edges, us_ref,
                      cut_ref.replication_factor))
 
-    by_w = {}
     for w in WORKERS:
         def dist_pipeline(w=w):
             g = dist_ingest(path, workers=w)
@@ -84,9 +113,8 @@ def run() -> list[dict]:
                                       merge_period=MERGE_PERIOD)
 
         (g, cut), us = timed_best(dist_pipeline, repeats=REPEATS)
-        row = _row("dist", w, g.num_edges, us, cut.replication_factor)
-        rows.append(row)
-        by_w[w] = row
+        rows.append(_row(LINES, "dist", w, g.num_edges, us,
+                         cut.replication_factor))
         if w == 1:
             # the W=1 contract: bit-identical to the stream engine
             assert np.array_equal(cut.assignment, cut_ref.assignment), \
@@ -94,16 +122,55 @@ def run() -> list[dict]:
             assert np.array_equal(g.src, g_ref.src), \
                 "sharded parse (W=1) diverged from the sequential ingester"
 
+    # ----- the 5.1M-edge pipelined-scaling headline ----- #
+    big_path = _trace_path(BIG_LINES)
+    by_w: dict = {}
+    timelines: dict = {}
+    for w in BIG_WORKERS:
+        tl: dict = {}
+
+        def big_pipeline(w=w, tl=tl):
+            # trace path straight into the cut: W>1 pipelines parse→cut
+            return dist_vertex_cut(big_path, CUT_P, method="wb_libra",
+                                   workers=w, merge_period=MERGE_PERIOD,
+                                   timeline=tl)
+
+        cut, us = timed_best(big_pipeline, repeats=BIG_REPEATS)
+        rows.append(_row(BIG_LINES, "dist", w, len(cut.assignment), us,
+                         cut.replication_factor))
+        by_w[w] = rows[-1]
+        if w > 1:
+            assert tl.get("mode") == "pipelined", \
+                f"W={w} trace-path cut did not pipeline: {tl.get('mode')}"
+            timelines[w] = _trim_timeline(tl)
+
     speedup_w4 = by_w[1]["us_total"] / max(by_w[4]["us_total"], 1e-9)
+    speedup_w8 = by_w[1]["us_total"] / max(by_w[8]["us_total"], 1e-9)
     rf_ratio_w4 = (by_w[4]["replication_factor"]
                    / max(by_w[1]["replication_factor"], 1e-9))
     emit("dist_scaling/speedup_W4", by_w[4]["us_total"],
          f"vs_W1={speedup_w4:.2f}x rf_ratio={rf_ratio_w4:.3f}")
+    emit("dist_scaling/speedup_W8", by_w[8]["us_total"],
+         f"vs_W1={speedup_w8:.2f}x")
+    host_cores = (len(os.sched_getaffinity(0))
+                  if hasattr(os, "sched_getaffinity") else os.cpu_count())
+    # monotone scaling through W=8: W=8 must never lose to W=4 (10%
+    # wall-clock noise allowance; both are single-shot timings).  Only
+    # enforceable where 8 workers have 8 cores to scale onto — on a
+    # smaller host the extra workers are pure scheduling overhead.
+    if host_cores >= 8:
+        assert speedup_w8 >= speedup_w4 * 0.9, \
+            f"W=8 ({speedup_w8:.2f}x) fell behind W=4 ({speedup_w4:.2f}x)"
     write_bench_json("dist_scaling", rows,
-                     meta={"lines": LINES, "cut_p": CUT_P,
+                     meta={"lines": LINES, "big_lines": BIG_LINES,
+                           "cut_p": CUT_P,
                            "merge_period": MERGE_PERIOD,
+                           "host_cores": host_cores,
                            "speedup_w4": round(speedup_w4, 2),
-                           "rf_ratio_w4": round(rf_ratio_w4, 4)})
+                           "speedup_w8": round(speedup_w8, 2),
+                           "rf_ratio_w4": round(rf_ratio_w4, 4),
+                           "timeline_w4": timelines.get(4),
+                           "timeline_w8": timelines.get(8)})
     return rows
 
 

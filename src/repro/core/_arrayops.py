@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["csr_adjacency", "dedup_edges", "replica_csr",
-           "segment_entries", "interaction_from_csr", "star_triples",
+           "masks_to_replica_csr", "segment_entries",
+           "interaction_from_csr", "star_triples",
            "merge_limb_masks", "merge_deltas"]
 
 
@@ -63,6 +64,65 @@ def replica_csr(n: int, p: int, src: np.ndarray, dst: np.ndarray,
     key = np.unique(v * p + c)
     indptr = np.searchsorted(key, np.arange(n + 1, dtype=np.int64) * p)
     return indptr.astype(np.int64), (key % p).astype(np.int32)
+
+
+def _masks_block_nonzero(rows: np.ndarray, p: int
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """(local vertex ids, cluster ids) of the set bits in one block of
+    bitmask limb rows, in (vertex, cluster)-sorted order."""
+    k, limbs = rows.shape
+    # '<u8' pins the limb byte layout so bit j of limb l is cluster
+    # 64*l + j on any host endianness
+    bits = np.unpackbits(rows.astype("<u8").view(np.uint8).reshape(k, -1),
+                         axis=1, bitorder="little")
+    vs, cs = np.nonzero(bits[:, :p])
+    return vs, cs.astype(np.int32)
+
+
+def masks_to_replica_csr(masks: np.ndarray, n: int, limbs: int, p: int,
+                         executor=None, shards: int = 1
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Replica CSR decoded straight from bitmask limb rows.
+
+    The streaming engines maintain `uint64[n*limbs]` A(v) rows as they
+    place edges — after the final shard merge those rows ARE the replica
+    sets, so the finalize can skip the sort-based `replica_csr` over all
+    2|E| endpoints and decode n*limbs words instead.  Bit-identical to
+    `replica_csr(n, p, src, dst, assignment)` whenever `masks` equals
+    the assignment-derived sets (row-major `np.nonzero` yields each
+    vertex's clusters in ascending order, exactly the sorted-CSR
+    contract).  `masks` shorter than `n*limbs` is padded with empty
+    rows (vertices the stream never grew to have empty replica sets).
+
+    With `executor`/`shards` the decode fans out over contiguous vertex
+    ranges (numpy releases the GIL in the unpack/nonzero passes), and
+    the per-shard results concatenate in range order — the output is
+    independent of `executor`, `shards`, and scheduling.
+    """
+    if len(masks) < n * limbs:
+        padded = np.zeros(n * limbs, dtype=np.uint64)
+        padded[:len(masks)] = masks
+        masks = padded
+    rows = masks[:n * limbs].reshape(n, limbs)
+    shards = max(1, min(int(shards), max(1, n)))
+    bounds = [n * s // shards for s in range(shards + 1)]
+    blocks = [rows[a:b] for a, b in zip(bounds[:-1], bounds[1:]) if a < b]
+    if executor is not None and len(blocks) > 1:
+        parts = list(executor.map(lambda blk: _masks_block_nonzero(blk, p),
+                                  blocks))
+    else:
+        parts = [_masks_block_nonzero(blk, p) for blk in blocks]
+    counts = np.zeros(n, dtype=np.int64)
+    flats = []
+    for (vs, cs), a in zip(parts, bounds[:-1]):
+        if len(vs):
+            counts[a:a + int(vs[-1]) + 1] = np.bincount(vs)
+        flats.append(cs)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    flat = (np.concatenate(flats) if flats
+            else np.zeros(0, dtype=np.int32))
+    return indptr, flat
 
 
 # ---------------------------------------------------------------------- #

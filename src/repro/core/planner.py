@@ -58,7 +58,8 @@ class PlanReport:
 def plan_graph(g, p: int, method: str = "wb_libra",
                lam: float = 1.0, machine: Machine | None = None,
                backend: str = "fast", workers: int = 1,
-               merge_period: "int | None" = None) -> PlanReport:
+               merge_period: "int | None" = None,
+               divergence: "float | None" = None) -> PlanReport:
     """Plan `g` — an `IRGraph`, or a path to an `.npz` snapshot / NDJSON
     dynamic trace (the `repro.trace` front end).  `backend` threads
     through every stage ("fast"/"native"/"python"/"pallas"/"reference");
@@ -74,7 +75,8 @@ def plan_graph(g, p: int, method: str = "wb_libra",
         g = coerce_graph(g)
         from ..dist import dist_vertex_cut
         cut = dist_vertex_cut(g, p, method=method, lam=lam,
-                              workers=workers, merge_period=merge_period)
+                              workers=workers, merge_period=merge_period,
+                              divergence=divergence)
     else:
         g = coerce_graph(g)
         cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)

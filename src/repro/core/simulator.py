@@ -261,7 +261,8 @@ def coerce_graph(g) -> IRGraph:
 def run_pipeline(g, p: int, method: str, lam: float = 1.0,
                  machine: Machine | None = None, seed: int = 0,
                  backend: str = "fast", workers: int = 1,
-                 merge_period: "int | None" = None):
+                 merge_period: "int | None" = None,
+                 divergence: "float | None" = None):
     """partition -> map -> simulate, returning (partition, mapping, report).
 
     The end-to-end path of Fig. 1: structure analysis is already in `g`
@@ -273,7 +274,9 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
     "dist" — the sharded streaming partitioner of `repro.dist`, which
     ingests trace paths through the parallel parse front end and runs
     the cut on `workers` shard workers merging every `merge_period`
-    edges (`workers=1` is bit-identical to "fast").  The mapping and
+    edges — full state merges every round, or adaptively when the
+    per-cluster load drift exceeds `divergence` × the mean cluster load
+    (`workers=1` is bit-identical to "fast").  The mapping and
     simulator run their reference oracle iff `backend == "reference"`
     and the Pallas segment-sum layer iff `backend == "pallas"`
     (interpret mode on CPU — see README Backends).
@@ -295,7 +298,8 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
             from ..dist import dist_vertex_cut
             part = dist_vertex_cut(g, p, method=method, lam=lam, seed=seed,
                                    workers=workers,
-                                   merge_period=merge_period)
+                                   merge_period=merge_period,
+                                   divergence=divergence)
         else:
             part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
                                backend=backend)

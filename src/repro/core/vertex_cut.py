@@ -243,20 +243,57 @@ class ShardCutState:
                            self.bound, self.loads, self.masks, self.limbs,
                            self.rem, out, writeback=True)
 
-    def adopt(self, loads: np.ndarray, rem: np.ndarray,
+    def adopt(self, loads: np.ndarray, rem: "np.ndarray | None",
               masks: np.ndarray) -> None:
-        """Install a merged near-global snapshot (the merge hook).
+        """Install a merged near-global snapshot (the full merge hook).
 
-        `repro.dist.engine` calls this at every merge barrier after
-        reducing all shards' views (`merge_limb_masks` for replica
-        masks, `merge_deltas` for loads / remaining degrees); the shard
-        resumes streaming against the merged arrays.  Also clears
-        `fresh`, so Case-4 batch seeding never re-fires mid-stream.
+        `repro.dist.engine` calls this at merge barriers after reducing
+        all shards' views (`merge_limb_masks` for replica masks,
+        `merge_deltas` for loads / remaining degrees); the shard
+        resumes streaming against the merged arrays.  `rem=None` skips
+        the remaining-degree install — the Libra placement rule never
+        consults `rem`, so Libra-method merges ship loads+masks only.
+        Also clears `fresh`, so Case-4 batch seeding never re-fires
+        mid-stream.
         """
         np.copyto(self.loads, loads)
-        np.copyto(self.rem, rem)
+        if rem is not None:
+            np.copyto(self.rem, rem)
         np.copyto(self.masks, masks)
         self.fresh = False
+
+    def adopt_loads(self, loads: np.ndarray) -> None:
+        """Install merged loads only (the cheap adaptive-merge hook).
+
+        The adaptive merge schedule reconciles the O(p) load vector
+        every round but defers the O(n·limbs) replica/remaining-degree
+        merge until the load-divergence bound trips — loads drive the
+        λ-bound and every least-loaded argmin, so keeping them
+        near-global is what protects balance between full merges.
+        Clears `fresh` for the same reason `adopt` does: seeding
+        assumes an all-zero load vector.
+        """
+        np.copyto(self.loads, loads)
+        self.fresh = False
+
+    def grow(self, n: int) -> None:
+        """Extend the state to an `n`-vertex graph (new rows empty).
+
+        The pipelined dataflow creates shard states before the parse
+        has discovered the full vertex set and grows them as merged
+        parse shards arrive; unseen vertices have empty replica sets
+        and zero remaining degree, which is exactly the all-zero
+        extension.  A no-op when the state already covers `n`.
+        """
+        old = len(self.rem)
+        if n <= old:
+            return
+        grown = np.zeros(n * self.limbs, dtype=np.uint64)
+        grown[:old * self.limbs] = self.masks
+        self.masks = grown
+        rem = np.zeros(n, dtype=np.int64)
+        rem[:old] = self.rem
+        self.rem = rem
 
 
 # ---------------------------------------------------------------------- #

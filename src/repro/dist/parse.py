@@ -37,6 +37,7 @@ are shard-relative.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 
@@ -48,7 +49,7 @@ from ..trace.ingest import (DEFAULT_CHUNK_EDGES, TraceStats, _open_lines,
 from ..trace.weights import resolve_weight_model
 
 __all__ = ["shard_byte_ranges", "dist_ingest", "dist_ingest_with_stats",
-           "ShardParse"]
+           "ShardParse", "ShardMerger", "open_shard_parses"]
 
 POOLS = ("auto", "process", "serial")
 
@@ -272,32 +273,52 @@ def _parse_shard(task) -> ShardParse:
 
 
 # ---------------------------------------------------------------------- #
-# sequential merge
+# incremental merge
 # ---------------------------------------------------------------------- #
-def _merge_shards(shards: "list[ShardParse]", weight_fn, name: str,
-                  keep_labels: bool) -> "tuple[IRGraph, TraceStats]":
-    global_defs: dict = {}            # fn -> {sym: (global vid, bytes)}
-    offset = 0
-    srcs, dsts, ws = [], [], []
-    labels: "list | None" = [] if keep_labels else None
-    sums = dict.fromkeys(
-        ("lines", "records", "cfg_records", "skipped", "const_uses",
-         "livein_uses", "void_defs", "cfg_violations"), 0)
-    peak = 0
-    fns: set = set()
-    bbs: set = set()
+class ShardMerger:
+    """Incremental cross-shard def-table resolution, in stream order.
 
-    for sh in shards:
+    One `add(shard)` per parse shard, strictly in shard order: it
+    resolves the shard's pending live-ins against the def tables
+    accumulated from earlier shards, remaps the shard's edges to global
+    vertex ids, and returns them — so a consumer (the pipelined cut
+    engine) can start streaming a shard's edges the moment it is merged,
+    without waiting for the rest of the parse.  `finish()` assembles the
+    full `(IRGraph, TraceStats)`; feeding every shard through `add` and
+    calling `finish` is exactly the old one-shot merge (the sequential
+    ingester equivalence contract is unchanged).
+    """
+
+    def __init__(self, weight_fn, keep_labels: bool):
+        self._weight_fn = weight_fn
+        self._global_defs: dict = {}   # fn -> {sym: (global vid, bytes)}
+        self.n = 0                     # global vertex count so far
+        self.edges = 0                 # global edge count so far
+        self._srcs: list = []
+        self._dsts: list = []
+        self._ws: list = []
+        self._labels: "list | None" = [] if keep_labels else None
+        self._sums = dict.fromkeys(
+            ("lines", "records", "cfg_records", "skipped", "const_uses",
+             "livein_uses", "void_defs", "cfg_violations"), 0)
+        self._peak = 0
+        self._fns: set = set()
+        self._bbs: set = set()
+
+    def add(self, sh: ShardParse
+            ) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
+        """Merge the next shard; return its (src, dst, w) in global ids."""
+        weight_fn = self._weight_fn
         resolved: dict = {}            # placeholder local vid -> (gvid, b)
         for fn, sym, vid in sh.pend_syms:
-            entry = global_defs.get(fn, {}).get(sym)
+            entry = self._global_defs.get(fn, {}).get(sym)
             if entry is not None:
                 resolved[vid] = entry
         keep = np.ones(sh.n, dtype=bool)
         if resolved:
             keep[np.fromiter(resolved, dtype=np.int64,
                              count=len(resolved))] = False
-        l2g = np.cumsum(keep) - 1 + offset
+        l2g = np.cumsum(keep) - 1 + self.n
         for vid, (gvid, _b) in resolved.items():
             l2g[vid] = gvid
 
@@ -308,12 +329,15 @@ def _merge_shards(shards: "list[ShardParse]", weight_fn, name: str,
                 # the true producer's def bytes were unknown at parse
                 # time; recompute exactly what the sequential pass paid
                 w[edge_idx] = weight_fn(op, ty, entry[1])
-        srcs.append(l2g[sh.src] if sh.n else sh.src)
-        dsts.append(l2g[sh.dst] if sh.n else sh.dst)
-        ws.append(w)
+        src = l2g[sh.src] if sh.n else sh.src
+        dst = l2g[sh.dst] if sh.n else sh.dst
+        self._srcs.append(src)
+        self._dsts.append(dst)
+        self._ws.append(w)
+        self.edges += len(src)
 
         for fn, table in sh.defs_by_fn.items():
-            gt = global_defs.setdefault(fn, {})
+            gt = self._global_defs.setdefault(fn, {})
             for sym, (vid, b) in table.items():
                 if vid in resolved and b is None:
                     # entry is a resolved placeholder: the earlier
@@ -321,35 +345,46 @@ def _merge_shards(shards: "list[ShardParse]", weight_fn, name: str,
                     continue
                 gt[sym] = (int(l2g[vid]), b)
 
-        if labels is not None and sh.labels is not None:
+        if self._labels is not None and sh.labels is not None:
             if resolved:
-                labels.extend(lab for i, lab in enumerate(sh.labels)
-                              if keep[i])
+                self._labels.extend(lab for i, lab in enumerate(sh.labels)
+                                    if keep[i])
             else:
-                labels.extend(sh.labels)
-        offset += int(keep.sum())
+                self._labels.extend(sh.labels)
+        self.n += int(keep.sum())
 
         c = sh.counters
-        for k in sums:
-            sums[k] += c[k]
-        sums["livein_uses"] -= len(resolved)   # provisional, not real
-        peak = max(peak, c["peak_chunk_edges"])
-        fns |= sh.fns
-        bbs |= sh.bbs
+        for k in self._sums:
+            self._sums[k] += c[k]
+        self._sums["livein_uses"] -= len(resolved)  # provisional, not real
+        self._peak = max(self._peak, c["peak_chunk_edges"])
+        self._fns |= sh.fns
+        self._bbs |= sh.bbs
+        return src, dst, w
 
-    if srcs:
-        src = np.concatenate(srcs).astype(np.int32)
-        dst = np.concatenate(dsts).astype(np.int32)
-        w = np.concatenate(ws)
-    else:
-        src = np.zeros(0, np.int32)
-        dst = np.zeros(0, np.int32)
-        w = np.zeros(0, np.float64)
-    stats = TraceStats(peak_chunk_edges=peak, functions=len(fns),
-                       blocks=len(bbs), **sums)
-    g = IRGraph(n=offset, src=src, dst=dst, w=w, name=name,
-                node_labels=labels)
-    return g, stats
+    def finish(self, name: str) -> "tuple[IRGraph, TraceStats]":
+        if self._srcs:
+            src = np.concatenate(self._srcs).astype(np.int32)
+            dst = np.concatenate(self._dsts).astype(np.int32)
+            w = np.concatenate(self._ws)
+        else:
+            src = np.zeros(0, np.int32)
+            dst = np.zeros(0, np.int32)
+            w = np.zeros(0, np.float64)
+        stats = TraceStats(peak_chunk_edges=self._peak,
+                           functions=len(self._fns),
+                           blocks=len(self._bbs), **self._sums)
+        g = IRGraph(n=self.n, src=src, dst=dst, w=w, name=name,
+                    node_labels=self._labels)
+        return g, stats
+
+
+def _merge_shards(shards: "list[ShardParse]", weight_fn, name: str,
+                  keep_labels: bool) -> "tuple[IRGraph, TraceStats]":
+    mg = ShardMerger(weight_fn, keep_labels)
+    for sh in shards:
+        mg.add(sh)
+    return mg.finish(name)
 
 
 # ---------------------------------------------------------------------- #
@@ -399,6 +434,19 @@ def dist_ingest_with_stats(source, *, workers: int = 1,
         if name is not None:
             g = dataclasses.replace(g, name=name)
         return g, stats
+    tasks = _shard_tasks(source, workers, weight_model, chunk_edges,
+                         keep_labels, cfg, on_error, pool)
+    mg = ShardMerger(resolve_weight_model(weight_model), keep_labels)
+    with open_shard_parses(tasks, pool, weight_model) as shards:
+        for sh in shards:
+            mg.add(sh)
+    return mg.finish(_source_name(source, name))
+
+
+def _shard_tasks(source, workers: int, weight_model, chunk_edges: int,
+                 keep_labels: bool, cfg, on_error: str,
+                 pool: str) -> list:
+    """Build the per-shard parse task tuples for an NDJSON source."""
     if pool not in POOLS:
         raise ValueError(f"unknown pool {pool!r}; choose from {POOLS}")
     workers = max(1, int(workers))
@@ -418,7 +466,25 @@ def dist_ingest_with_stats(source, *, workers: int = 1,
         tasks = [(path, a, b, None, weight_model, chunk_edges, keep_labels,
                   cfg, on_error)
                  for a, b in shard_byte_ranges(path, workers)]
+    if not tasks:
+        tasks = [(None, 0, 0, "", weight_model, chunk_edges, keep_labels,
+                  cfg, on_error)]
+    return tasks
 
+
+@contextlib.contextmanager
+def open_shard_parses(tasks: list, pool: str, weight_model):
+    """Yield an iterator of `ShardParse` results, strictly in task order.
+
+    With a process pool the shards parse concurrently and stream back
+    through an ordered `imap` — the consumer can merge (and cut) shard
+    k while shards k+1..W are still parsing, which is the parse side of
+    the pipelined dataflow.  `pool` semantics match
+    `dist_ingest_with_stats`; the serial path is the determinism oracle
+    and the degenerate 1-task path.
+    """
+    if pool not in POOLS:
+        raise ValueError(f"unknown pool {pool!r}; choose from {POOLS}")
     use_processes = (pool == "process"
                      or (pool == "auto" and len(tasks) > 1
                          and isinstance(weight_model, str)))
@@ -427,14 +493,9 @@ def dist_ingest_with_stats(source, *, workers: int = 1,
         method = "fork" if "fork" in mp.get_all_start_methods() else None
         ctx = mp.get_context(method)
         with ctx.Pool(processes=len(tasks)) as p:
-            shards = p.map(_parse_shard, tasks)
+            yield p.imap(_parse_shard, tasks)
     else:
-        shards = [_parse_shard(t) for t in tasks]
-    if not shards:
-        shards = [_parse_shard((None, 0, 0, "", weight_model, chunk_edges,
-                                keep_labels, cfg, on_error))]
-    return _merge_shards(shards, resolve_weight_model(weight_model),
-                         _source_name(source, name), keep_labels)
+        yield (_parse_shard(t) for t in tasks)
 
 
 def dist_ingest(source, **kw) -> IRGraph:

@@ -85,6 +85,11 @@ def main(argv=None) -> int:
     sp.add_argument("--lam", type=float, default=1.0)
     sp.add_argument("--backend", default="fast",
                     help="pipeline backend; --workers > 1 implies 'dist'")
+    sp.add_argument("--divergence", type=float, default=None,
+                    help="adaptive merge trigger for the dist backend: "
+                         "defer full state merges until the per-cluster "
+                         "load drift exceeds this fraction of the mean "
+                         "cluster load (default: merge every round)")
 
     sp = sub.add_parser("record",
                         help="write a JAX demo program's trace as NDJSON")
@@ -119,7 +124,8 @@ def main(argv=None) -> int:
         backend = "dist" if args.workers > 1 else args.backend
         report = plan_graph(g, args.clusters, method=args.method,
                             lam=args.lam, backend=backend,
-                            workers=args.workers)
+                            workers=args.workers,
+                            divergence=args.divergence)
         print(json.dumps(report.summary(), indent=2, default=float))
     elif args.cmd == "record":
         fn, fargs = demo_program(args.program)

@@ -23,8 +23,14 @@ sequential interpreter, which is the semantic reference and owns all
 error reporting.  Fallback is whole-file, so diagnostics (line numbers,
 messages) are exactly the sequential path's.
 
-Set ``REPRO_TRACE_SCANNER=0`` (or ``off``) to disable the scanner and
-force the sequential path everywhere.
+The scanner's whole-file batch passes win on small and medium traces
+but lose to the streaming interpreter once the file outgrows the
+page/CPU caches (the structural index is several full-size temporary
+arrays), so by default it only engages for files up to
+``REPRO_TRACE_SCAN_MAX_MB`` megabytes on disk (default 24; compressed
+inputs are judged by their on-disk size).  Set ``REPRO_TRACE_SCANNER=0``
+(or ``off``) to disable the scanner everywhere, or ``=1`` (``on``,
+``force``) to engage it regardless of file size.
 """
 from __future__ import annotations
 
@@ -36,9 +42,12 @@ from ..core.graph import IRGraph
 from .schema import type_bytes
 from .weights import resolve_weight_model
 
-__all__ = ["SCANNER_ENV", "scanner_enabled", "try_scan_ingest"]
+__all__ = ["SCANNER_ENV", "SCAN_MAX_MB_ENV", "scanner_enabled",
+           "scanner_mode", "try_scan_ingest"]
 
 SCANNER_ENV = "REPRO_TRACE_SCANNER"
+SCAN_MAX_MB_ENV = "REPRO_TRACE_SCAN_MAX_MB"
+DEFAULT_SCAN_MAX_MB = 24.0
 
 _BLOCK = 1 << 24                # structural pass block: 16 MiB
 _SYM_W = 24                     # max bytes for ids/ops/types
@@ -61,9 +70,37 @@ class _Fallback(Exception):
     """Input outside the scanner's subset — use the sequential path."""
 
 
+def scanner_mode() -> str:
+    """Scanner policy from the environment: "off", "force" or "auto".
+
+    "auto" (the default) engages the scanner only for files whose
+    on-disk size is within the `REPRO_TRACE_SCAN_MAX_MB` budget — the
+    batch structural passes materialise several full-size temporaries,
+    so past the cache-friendly regime the streaming interpreter is
+    faster despite parsing line by line.
+    """
+    v = os.environ.get(SCANNER_ENV, "").lower()
+    if v in ("0", "off", "false", "no"):
+        return "off"
+    if v in ("1", "on", "force", "yes"):
+        return "force"
+    return "auto"
+
+
 def scanner_enabled() -> bool:
-    return os.environ.get(SCANNER_ENV, "").lower() not in ("0", "off",
-                                                           "false", "no")
+    return scanner_mode() != "off"
+
+
+def _scan_size_ok(path: str) -> bool:
+    try:
+        limit = float(os.environ.get(SCAN_MAX_MB_ENV,
+                                     DEFAULT_SCAN_MAX_MB))
+    except ValueError:
+        limit = DEFAULT_SCAN_MAX_MB
+    try:
+        return os.path.getsize(path) <= limit * (1 << 20)
+    except OSError:
+        return True       # let _read_all surface (or fall back on) it
 
 
 def try_scan_ingest(source, *, weight_model="bytes", on_error="raise",
@@ -73,7 +110,8 @@ def try_scan_ingest(source, *, weight_model="bytes", on_error="raise",
     None means "not handled" — the caller runs the sequential ingester,
     which reproduces both the result and any error diagnostics.
     """
-    if not scanner_enabled():
+    mode = scanner_mode()
+    if mode == "off":
         return None
     if cfg is not None or on_error != "raise":
         return None
@@ -84,6 +122,8 @@ def try_scan_ingest(source, *, weight_model="bytes", on_error="raise",
     if not isinstance(source, (str, os.PathLike)):
         return None
     path = os.fspath(source)
+    if mode == "auto" and not _scan_size_ok(path):
+        return None
     try:
         data = _read_all(path)
     except (_Fallback, OSError):

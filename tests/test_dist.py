@@ -338,10 +338,31 @@ def test_dist_ingest_rejects_non_paths():
 # path inputs + pipeline plumbing
 # ---------------------------------------------------------------------- #
 def test_dist_cut_from_trace_path(trace_path):
+    # pipeline=False two-phases the path input: ingest + cut must match
+    # handing over the pre-ingested graph exactly
     g = dist_ingest(trace_path, workers=2)
-    a = dist_vertex_cut(trace_path, 16, workers=2, merge_period=4000)
+    a = dist_vertex_cut(trace_path, 16, workers=2, merge_period=4000,
+                        pipeline=False)
     b = dist_vertex_cut(g, 16, workers=2, merge_period=4000)
     np.testing.assert_array_equal(a.assignment, b.assignment)
+
+
+def test_dist_cut_from_trace_path_pipelined(trace_path):
+    # the auto-pipelined path is deterministic and a valid cut, but its
+    # prefix-snapshot swap/bound legitimately differs from two-phase
+    g = dist_ingest(trace_path, workers=2)
+    tl = {}
+    a = dist_vertex_cut(trace_path, 16, workers=2, merge_period=4000,
+                        timeline=tl)
+    b = dist_vertex_cut(trace_path, 16, workers=2, merge_period=4000)
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert tl["mode"] == "pipelined" and len(tl["rounds"]) >= 1
+    assert a.p == 16 and len(a.assignment) == g.num_edges
+    # replica CSR must agree with the assignment-derived sets
+    from repro.core._arrayops import replica_csr
+    indptr, flat = replica_csr(g.n, 16, g.src, g.dst, a.assignment)
+    np.testing.assert_array_equal(a.replica_indptr, indptr)
+    np.testing.assert_array_equal(a.replica_flat, flat)
 
 
 def test_dist_cut_from_npz_path(tmp_path, graph):
@@ -371,3 +392,180 @@ def test_empty_graph_dist():
     r = dist_vertex_cut(g, 4, workers=2)
     assert len(r.assignment) == 0
     assert r.replication_factor == 0.0
+
+
+# ---------------------------------------------------------------------- #
+# worker pools, pipelined dataflow, adaptive merges
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("pool", ("serial", "thread", "process"))
+def test_two_phase_pool_equivalence(graph, pool):
+    """The pool choice never affects the result (serial is the oracle)."""
+    ref = dist_vertex_cut(graph, 16, workers=3, merge_period=1000,
+                          pool="serial")
+    tl = {}
+    got = dist_vertex_cut(graph, 16, workers=3, merge_period=1000,
+                          pool=pool, timeline=tl)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert tl["mode"] == "two-phase"
+    from repro.core._native import native_available
+    expect = pool if (pool != "thread" or native_available()) else "thread"
+    assert tl["pool"] == expect
+
+
+@pytest.mark.parametrize("pool", ("serial", "thread", "process"))
+def test_pipelined_pool_equivalence(trace_path, pool):
+    ref = dist_vertex_cut(trace_path, 16, workers=3, merge_period=700,
+                          pool="serial")
+    tl = {}
+    got = dist_vertex_cut(trace_path, 16, workers=3, merge_period=700,
+                          pool=pool, timeline=tl)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert tl["mode"] == "pipelined" and tl["pool"] == pool
+
+
+def test_pipelined_determinism_tiny_rounds(trace_path):
+    """Racy interleavings (tiny rounds, many merges) must not leak into
+    the output: repeated runs are bit-identical for a fixed config."""
+    runs = [dist_vertex_cut(trace_path, 8, workers=4, merge_period=97)
+            for _ in range(3)]
+    for r in runs[1:]:
+        np.testing.assert_array_equal(runs[0].assignment,
+                                      r.assignment)
+
+
+def test_pipelined_independent_of_parse_workers(trace_path):
+    """Shard-count of the parse side must not affect the cut (round
+    boundaries are global edge offsets, not parse-shard boundaries)."""
+    a = dist_vertex_cut(trace_path, 8, workers=2, merge_period=1500)
+    for pw in (1, 3, 7):
+        b = dist_vertex_cut(trace_path, 8, workers=2, merge_period=1500,
+                            parse_workers=pw)
+        np.testing.assert_array_equal(a.assignment, b.assignment)
+
+
+def test_auto_pool_matches_engine(trace_path):
+    """auto routes native -> threads, pure-Python -> processes, so the
+    no-native CI job exercises the process pool end to end."""
+    from repro.core._native import native_available
+    tl = {}
+    dist_vertex_cut(trace_path, 8, workers=2, merge_period=4000,
+                    timeline=tl)
+    if native_available():
+        assert tl["engine"] == "native" and tl["pool"] == "thread"
+    else:
+        assert tl["engine"] == "python" and tl["pool"] == "process"
+
+
+def test_thread_pool_python_engine_warns(graph):
+    with pytest.warns(RuntimeWarning, match="GIL"):
+        r = dist_vertex_cut(graph, 8, workers=2, backend="python",
+                            pool="thread", merge_period=4000)
+    ref = dist_vertex_cut(graph, 8, workers=2, backend="python",
+                          pool="serial", merge_period=4000)
+    np.testing.assert_array_equal(r.assignment, ref.assignment)
+
+
+def test_pipeline_forced_ineligible_raises(graph, trace_path):
+    with pytest.raises(ValueError, match="pipeline=True"):
+        dist_vertex_cut(graph, 8, workers=2, pipeline=True)   # not a path
+    with pytest.raises(ValueError, match="pipeline=True"):
+        dist_vertex_cut(trace_path, 8, workers=1, pipeline=True)
+    with pytest.raises(ValueError, match="pipeline=True"):
+        dist_vertex_cut(trace_path, 8, workers=2, method="pg",
+                        pipeline=True)                        # PG rule
+    with pytest.raises(ValueError, match="pipeline"):
+        dist_vertex_cut(trace_path, 8, workers=2, pipeline="sometimes")
+
+
+def test_adaptive_merge_determinism_and_savings(trace_path):
+    """divergence defers full merges deterministically; divergence=None
+    reproduces the fixed every-round schedule."""
+    tl_fixed, tl_adapt = {}, {}
+    fixed = dist_vertex_cut(trace_path, 16, workers=3, merge_period=500,
+                            timeline=tl_fixed)
+    a1 = dist_vertex_cut(trace_path, 16, workers=3, merge_period=500,
+                         divergence=1.0, timeline=tl_adapt)
+    a2 = dist_vertex_cut(trace_path, 16, workers=3, merge_period=500,
+                         divergence=1.0)
+    np.testing.assert_array_equal(a1.assignment, a2.assignment)
+    assert tl_fixed["full_merges"] == tl_fixed["round_merges"]
+    assert tl_adapt["full_merges"] < tl_adapt["round_merges"]
+    # a loose bound still ends with a valid cut of comparable quality
+    assert len(a1.assignment) == len(fixed.assignment)
+    assert a1.replication_factor <= fixed.replication_factor * 1.25
+
+
+def test_adaptive_merge_quality_sweep(graph):
+    """Adaptive merges (tight bound) must not degrade cut quality vs the
+    fixed every-round schedule beyond tolerance, across a (p, W) sweep."""
+    for p, w in ((8, 2), (32, 4)):
+        fixed = dist_vertex_cut(graph, p, workers=w, merge_period=2000)
+        adapt = dist_vertex_cut(graph, p, workers=w, merge_period=2000,
+                                divergence=0.05)
+        assert (adapt.replication_factor
+                <= fixed.replication_factor * 1.05), (p, w)
+
+
+def test_divergence_validation(graph):
+    with pytest.raises(ValueError, match="divergence"):
+        dist_vertex_cut(graph, 8, workers=2, divergence=-0.1)
+
+
+def test_shard_state_grow_and_adopt_loads():
+    st = ShardCutState.create(4, 128, np.zeros(4, np.int64), np.inf,
+                              True, "python")
+    st.masks[: 4 * st.limbs] = 7
+    st.rem[:] = 5
+    st.grow(9)
+    assert len(st.rem) == 9 and len(st.masks) == 9 * st.limbs
+    assert (st.masks[: 4 * st.limbs] == 7).all()
+    assert (st.masks[4 * st.limbs:] == 0).all()
+    assert (st.rem[:4] == 5).all() and (st.rem[4:] == 0).all()
+    st.grow(3)                      # shrink is a no-op
+    assert len(st.rem) == 9
+    st2 = ShardCutState.create(3, 8, np.zeros(3, np.int64), np.inf,
+                               True, "python")
+    assert st2.fresh
+    st2.adopt_loads(np.arange(8, dtype=np.float64))
+    assert not st2.fresh and st2.loads[7] == 7.0
+    # adopt with rem=None leaves rem untouched (Libra never reads it)
+    st2.rem[:] = 9
+    st2.adopt(np.zeros(8), None, np.zeros(3 * st2.limbs, np.uint64))
+    assert (st2.rem == 9).all()
+
+
+def test_masks_to_replica_csr_matches_sort_based(graph):
+    from concurrent.futures import ThreadPoolExecutor
+    from repro.core._arrayops import masks_to_replica_csr, replica_csr
+
+    for p in (3, 64, 130):
+        cut = vertex_cut(graph, p, method="wb_libra", backend="fast")
+        limbs = (p + 63) // 64
+        masks = np.zeros(graph.n * limbs, dtype=np.uint64)
+        for arrs, v in ((graph.src, None), (graph.dst, None)):
+            idx = arrs.astype(np.int64) * limbs + cut.assignment // 64
+            np.bitwise_or.at(masks, idx,
+                             np.uint64(1) << (cut.assignment % 64
+                                              ).astype(np.uint64))
+        want = replica_csr(graph.n, p, graph.src, graph.dst, cut.assignment)
+        got = masks_to_replica_csr(masks, graph.n, limbs, p)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+        with ThreadPoolExecutor(max_workers=4) as ex:
+            sharded = masks_to_replica_csr(masks, graph.n, limbs, p,
+                                           executor=ex, shards=7)
+        np.testing.assert_array_equal(sharded[0], want[0])
+        np.testing.assert_array_equal(sharded[1], want[1])
+        # short masks pad as empty rows
+        trunc = masks_to_replica_csr(masks[: (graph.n - 2) * limbs],
+                                     graph.n, limbs, p)
+        assert trunc[0][-1] <= want[0][-1]
+
+
+def test_timeline_shape(graph):
+    tl = {}
+    dist_vertex_cut(graph, 8, workers=2, merge_period=3000, timeline=tl)
+    assert tl["mode"] == "two-phase" and tl["workers"] == 2
+    assert tl["finalize_us"] >= 0 and len(tl["rounds"]) >= 1
+    r0 = tl["rounds"][0]
+    assert len(r0["cut_us"]) == 2 and "merge_us" in r0

@@ -126,3 +126,42 @@ def test_gzip_trace_reproducible(tmp_path_factory, text, workers, p, seed):
         b = dist_vertex_cut(g0, p, seed=seed, workers=workers,
                             merge_period=16)
         np.testing.assert_array_equal(a.assignment, b.assignment)
+
+
+@given(g=small_graphs(), p=st.integers(2, 12),
+       workers=st.integers(2, 4), seed=st.integers(0, 3),
+       divergence=st.sampled_from([0.0, 0.05, 0.5, 2.0]))
+@settings(max_examples=30, deadline=None)
+def test_adaptive_merge_reproducible_and_quality(g, p, workers, seed,
+                                                 divergence):
+    """Adaptive merges stay a pure function of the inputs, and a tight
+    divergence bound never degrades quality materially vs the fixed
+    every-round schedule (d=0 trips every round, so it matches it)."""
+    kw = dict(seed=seed, workers=workers, merge_period=16)
+    fixed = dist_vertex_cut(g, p, **kw)
+    a = dist_vertex_cut(g, p, divergence=divergence, **kw)
+    b = dist_vertex_cut(g, p, divergence=divergence, **kw)
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert (a.assignment >= 0).all() and (a.assignment < p).all()
+    assert np.isclose(a.loads.sum(), g.total_weight)
+    if divergence <= 0.05:
+        assert (a.replication_factor
+                <= fixed.replication_factor * 1.05 + 1e-9)
+
+
+@given(text=small_traces(), workers=st.integers(2, 4),
+       p=st.integers(2, 8),
+       merge_period=st.sampled_from([3, 17, 256]))
+@settings(max_examples=25, deadline=None)
+def test_pipelined_trace_path_reproducible(tmp_path_factory, text, workers,
+                                           p, merge_period):
+    """Pipelined cut from a trace path: bit-identical across runs and
+    across worker pools, for any (tiny) round quantum."""
+    path = tmp_path_factory.mktemp("hyp-pipe") / "t.ndjson"
+    path.write_text(text)
+    a = dist_vertex_cut(str(path), p, workers=workers,
+                        merge_period=merge_period)
+    b = dist_vertex_cut(str(path), p, workers=workers,
+                        merge_period=merge_period, pool="serial")
+    np.testing.assert_array_equal(a.assignment, b.assignment)
+    assert (a.assignment >= 0).all() and (a.assignment < p).all()

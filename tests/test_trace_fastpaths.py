@@ -10,6 +10,7 @@ path is.
 """
 import gzip
 import json
+import os
 import struct
 
 import numpy as np
@@ -99,6 +100,41 @@ def test_scanner_env_override(tmp_path, monkeypatch):
         assert st.engine == "stream"
     monkeypatch.setenv(SCANNER_ENV, "1")
     assert scanner_enabled()
+    _, st = ingest_trace_with_stats(path)
+    assert st.engine == "scan"
+
+
+def test_scanner_size_heuristic(tmp_path, monkeypatch):
+    """Auto mode falls back to the stream engine past the size budget;
+    force mode scans regardless; results stay bit-identical."""
+    from repro.trace import SCAN_MAX_MB_ENV, scanner_mode
+
+    path = _write_synth(tmp_path, 400, seed=11)
+    size_mb = os.path.getsize(path) / (1 << 20)
+
+    monkeypatch.delenv(SCANNER_ENV, raising=False)
+    assert scanner_mode() == "auto"
+    # budget above the file: the scanner engages
+    monkeypatch.setenv(SCAN_MAX_MB_ENV, str(size_mb * 2))
+    g_scan, st = ingest_trace_with_stats(path)
+    assert st.engine == "scan"
+    # budget below the file: auto falls back to the stream engine
+    monkeypatch.setenv(SCAN_MAX_MB_ENV, str(size_mb / 2))
+    g_stream, st = ingest_trace_with_stats(path)
+    assert st.engine == "stream"
+    _assert_graphs_identical(g_scan, g_stream)
+    # force overrides the budget
+    monkeypatch.setenv(SCANNER_ENV, "1")
+    assert scanner_mode() == "force"
+    g_forced, st = ingest_trace_with_stats(path)
+    assert st.engine == "scan"
+    _assert_graphs_identical(g_forced, g_stream)
+    # off overrides everything
+    monkeypatch.setenv(SCANNER_ENV, "off")
+    assert scanner_mode() == "off"
+    # garbage budget falls back to the default instead of crashing
+    monkeypatch.setenv(SCANNER_ENV, "")
+    monkeypatch.setenv(SCAN_MAX_MB_ENV, "not-a-number")
     _, st = ingest_trace_with_stats(path)
     assert st.engine == "scan"
 
