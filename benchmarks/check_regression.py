@@ -66,6 +66,15 @@ def main(argv=None) -> int:
                          "is unmeasurable on a box with fewer cores, and "
                          "an uncalibrated gate that no measured baseline "
                          "can meet gates nothing")
+    ap.add_argument("--max-serial-fraction", type=float, default=None,
+                    help="bound the measured non-parallel share of the "
+                         "run: require meta.<serial-fraction-key> <= this "
+                         "(host-aware: on hosts with fewer cores than "
+                         "--speedup-cores the bound relaxes toward 1.0, "
+                         "and a 1-core host auto-passes — there is no "
+                         "parallelism to measure)")
+    ap.add_argument("--serial-fraction-key", default="serial_fraction_w4",
+                    help="meta key checked by --max-serial-fraction")
     ap.add_argument("--quality-fields", default=None,
                     help="comma list of lower-is-better row fields (e.g. "
                          "exec_time,data_comm_bytes) gated at "
@@ -158,6 +167,37 @@ def main(argv=None) -> int:
         else:
             print(f"OK        {args.speedup_key} = {sp}x "
                   f"(gate {gate:.2f}x)")
+
+    if args.max_serial_fraction is not None:
+        with open(args.run_json) as f:
+            meta = json.load(f).get("meta", {})
+        sf = meta.get(args.serial_fraction_key)
+        host = meta.get("host_cores") or os.cpu_count() or 1
+        cores = args.speedup_cores or 1
+        # Amdahl in reverse: a W-core serial-fraction target is only
+        # measurable when W cores exist.  Interpolate the bound from
+        # 1.0 (1 host core: everything is serial, nothing to gate)
+        # down to the requested max at full core count, with the same
+        # 20% overhead slack the speedup gate uses.
+        if cores > 1:
+            frac = (min(host, cores) - 1) / (cores - 1)
+            allowed = min(1.0, 1 - (1 - args.max_serial_fraction)
+                          * 0.8 * frac)
+        else:
+            allowed = 1.0
+        print(f"serial-fraction gate scaled for {host} host cores "
+              f"(target <= {args.max_serial_fraction} @ {cores} cores "
+              f"-> <= {allowed:.3f})")
+        if sf is None:
+            failures.append(f"meta {args.serial_fraction_key} missing "
+                            "from run (serial-fraction coverage lost)")
+        elif sf > allowed:
+            failures.append(
+                f"meta {args.serial_fraction_key} {sf:.3f} "
+                f"> {allowed:.3f} (serial share too large)")
+        else:
+            print(f"OK        {args.serial_fraction_key} = {sf:.3f} "
+                  f"(gate <= {allowed:.3f})")
 
     if failures:
         print("\nPERF GATE FAILED:", file=sys.stderr)

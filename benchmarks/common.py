@@ -23,9 +23,11 @@ def graphs(scale: str = "reduced", names=None):
 
 
 def timed(fn, *args, **kw):
-    t0 = time.time()
+    # perf_counter, not time.time(): the gated rows need a monotonic
+    # clock — wall time can step backwards under NTP adjustment
+    t0 = time.perf_counter()
     out = fn(*args, **kw)
-    return out, (time.time() - t0) * 1e6  # us
+    return out, (time.perf_counter() - t0) * 1e6  # us
 
 
 def timed_best(fn, *args, repeats: int = 1, **kw):

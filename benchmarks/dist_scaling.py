@@ -27,9 +27,14 @@ Gates (`benchmarks/baselines/dist_scaling.json` + CI):
 
 The W=1 bit-identity contract is asserted outright: same assignment as
 `vertex_cut(..., backend="fast")` on the ingested graph, hence the same
-replication factor.  Per-round phase timings (parse-wait/cut/merge/
-finalize) of the big pipelined runs land in ``meta.timeline_w{4,8}``
-and ship with the CI artifact.
+replication factor.  Phase timings of the big pipelined runs flow
+through the `repro.obs` telemetry layer: each W runs inside a scoped
+collector, and the per-phase totals, per-lane utilization, and the
+measured serial fraction (the Amdahl `s` the `--max-serial-fraction`
+gate bounds) land in ``meta.phases_w{4,8}`` /
+``meta.serial_fraction_w4``.  Running the suite under
+``REPRO_PROFILE=out.json`` additionally exports the full per-worker
+Perfetto trace (the scoped collectors merge into the env collector).
 """
 from __future__ import annotations
 
@@ -37,8 +42,10 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.core import vertex_cut
 from repro.dist import dist_ingest, dist_vertex_cut
+from repro.obs.summarize import summarize_events
 from repro.trace import ingest_trace, synthesize_trace
 
 from .common import emit, timed_best, write_bench_json
@@ -54,7 +61,7 @@ MERGE_PERIOD = 1 << 16
 # CI, so one scheduler hiccup must not be able to sink (or inflate) it
 REPEATS = 2
 BIG_REPEATS = 1          # ~5.1M edges/run: one pass per W is plenty
-TIMELINE_ROUNDS = 32     # cap per-round detail shipped in the meta
+                         # (also keeps one obs collector per W run)
 
 
 def _trace_path(lines: int) -> str:
@@ -78,18 +85,21 @@ def _row(lines: int, backend: str, workers: int, edges: int, us: float,
     return row
 
 
-def _trim_timeline(tl: dict) -> dict:
-    """Meta-sized copy: phase totals always, per-round detail capped."""
-    rounds = tl.get("rounds") or []
-    out = {k: v for k, v in tl.items() if k != "rounds"}
-    out["n_rounds"] = len(rounds)
-    out["cut_us_total"] = round(sum(sum(r["cut_us"]) for r in rounds), 1)
-    out["merge_us_total"] = round(sum(r["merge_us"] for r in rounds), 1)
-    if rounds and "parse_wait_us" in rounds[0]:
-        out["parse_wait_us_total"] = round(
-            sum(r["parse_wait_us"] for r in rounds), 1)
-    out["rounds"] = rounds[:TIMELINE_ROUNDS]
-    return out
+def _phase_meta(summary: dict) -> dict:
+    """Meta-sized view of an obs summary: phase totals, utilization,
+    and the wall decomposition the serial-fraction gate reads."""
+    return {
+        "wall_us": round(summary["wall_us"], 1),
+        "parallel_us": round(summary["parallel_us"], 1),
+        "serial_us": round(summary["serial_us"], 1),
+        "idle_us": round(summary["idle_us"], 1),
+        "serial_fraction": round(summary["serial_fraction"], 4),
+        "phases": {name: {"count": int(ph["count"]),
+                          "total_us": round(ph["total_us"], 1)}
+                   for name, ph in sorted(summary["phases"].items())},
+        "lane_utilization": {lane: round(st["utilization"], 4)
+                             for lane, st in summary["lanes"].items()},
+    }
 
 
 def run() -> list[dict]:
@@ -125,31 +135,35 @@ def run() -> list[dict]:
     # ----- the 5.1M-edge pipelined-scaling headline ----- #
     big_path = _trace_path(BIG_LINES)
     by_w: dict = {}
-    timelines: dict = {}
+    summaries: dict = {}
     for w in BIG_WORKERS:
-        tl: dict = {}
-
-        def big_pipeline(w=w, tl=tl):
+        def big_pipeline(w=w):
             # trace path straight into the cut: W>1 pipelines parse→cut
             return dist_vertex_cut(big_path, CUT_P, method="wb_libra",
-                                   workers=w, merge_period=MERGE_PERIOD,
-                                   timeline=tl)
+                                   workers=w, merge_period=MERGE_PERIOD)
 
-        cut, us = timed_best(big_pipeline, repeats=BIG_REPEATS)
+        # scoped collector: the engine's telemetry spans become the
+        # per-round timeline (merged upward into REPRO_PROFILE if set)
+        with obs.scoped() as prof:
+            cut, us = timed_best(big_pipeline, repeats=BIG_REPEATS)
         rows.append(_row(BIG_LINES, "dist", w, len(cut.assignment), us,
                          cut.replication_factor))
         by_w[w] = rows[-1]
         if w > 1:
-            assert tl.get("mode") == "pipelined", \
-                f"W={w} trace-path cut did not pipeline: {tl.get('mode')}"
-            timelines[w] = _trim_timeline(tl)
+            assert any(ev["name"] == "dist.parse_wait"
+                       for ev in prof.events), \
+                f"W={w} trace-path cut did not pipeline (no parse/cut " \
+                "dataflow spans recorded)"
+            summaries[w] = _phase_meta(summarize_events(prof.events))
 
     speedup_w4 = by_w[1]["us_total"] / max(by_w[4]["us_total"], 1e-9)
     speedup_w8 = by_w[1]["us_total"] / max(by_w[8]["us_total"], 1e-9)
     rf_ratio_w4 = (by_w[4]["replication_factor"]
                    / max(by_w[1]["replication_factor"], 1e-9))
+    serial_fraction_w4 = summaries[4]["serial_fraction"]
     emit("dist_scaling/speedup_W4", by_w[4]["us_total"],
-         f"vs_W1={speedup_w4:.2f}x rf_ratio={rf_ratio_w4:.3f}")
+         f"vs_W1={speedup_w4:.2f}x rf_ratio={rf_ratio_w4:.3f} "
+         f"serial_fraction={serial_fraction_w4:.3f}")
     emit("dist_scaling/speedup_W8", by_w[8]["us_total"],
          f"vs_W1={speedup_w8:.2f}x")
     host_cores = (len(os.sched_getaffinity(0))
@@ -169,8 +183,9 @@ def run() -> list[dict]:
                            "speedup_w4": round(speedup_w4, 2),
                            "speedup_w8": round(speedup_w8, 2),
                            "rf_ratio_w4": round(rf_ratio_w4, 4),
-                           "timeline_w4": timelines.get(4),
-                           "timeline_w8": timelines.get(8)})
+                           "serial_fraction_w4": serial_fraction_w4,
+                           "phases_w4": summaries.get(4),
+                           "phases_w8": summaries.get(8)})
     return rows
 
 

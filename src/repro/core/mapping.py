@@ -41,6 +41,7 @@ import dataclasses
 
 import numpy as np
 
+from .. import obs
 from ._arrayops import interaction_from_csr
 from .vertex_cut import BACKENDS as _PARTITIONER_BACKENDS
 
@@ -287,8 +288,9 @@ def memory_centric_mapping(comm: np.ndarray, shared: np.ndarray,
     own = np.maximum(np.diagonal(shared), 1.0)
 
     place = _place_reference if backend == "reference" else _place_fast
-    core_of = place(comm, off_diag, own, machine, cluster_order,
-                    colocate_min_overlap)
+    with obs.span("map.place", backend=backend, p=p):
+        core_of = place(comm, off_diag, own, machine, cluster_order,
+                        colocate_min_overlap)
     return MappingResult(machine=machine, core_of=core_of, p=p)
 
 

@@ -25,6 +25,7 @@ import os
 
 import numpy as np
 
+from .. import obs
 from .graph import IRGraph
 from .jaxpr_graph import trace_to_graph
 from .mapping import (Machine, cluster_interaction_graphs,
@@ -67,26 +68,29 @@ def plan_graph(g, p: int, method: str = "wb_libra",
     "dist" runs the sharded streaming partitioner (`repro.dist`) on
     `workers` workers, ingesting trace paths through the parallel parse
     front end (`workers=1` is bit-identical to "fast")."""
-    if backend == "dist":
-        if isinstance(g, (str, os.PathLike)) \
-                and not os.fspath(g).endswith(".npz"):
-            from ..dist import dist_ingest
-            g = dist_ingest(g, workers=workers)
-        g = coerce_graph(g)
-        from ..dist import dist_vertex_cut
-        cut = dist_vertex_cut(g, p, method=method, lam=lam,
-                              workers=workers, merge_period=merge_period,
-                              divergence=divergence)
-    else:
-        g = coerce_graph(g)
-        cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
+    with obs.span("plan.cut", cat="section", backend=backend, p=p):
+        if backend == "dist":
+            if isinstance(g, (str, os.PathLike)) \
+                    and not os.fspath(g).endswith(".npz"):
+                from ..dist import dist_ingest
+                g = dist_ingest(g, workers=workers)
+            g = coerce_graph(g)
+            from ..dist import dist_vertex_cut
+            cut = dist_vertex_cut(g, p, method=method, lam=lam,
+                                  workers=workers, merge_period=merge_period,
+                                  divergence=divergence)
+        else:
+            g = coerce_graph(g)
+            cut = vertex_cut(g, p, method=method, lam=lam, backend=backend)
     map_backend = resolve_mapping_backend(backend)
-    comm, shared = cluster_interaction_graphs(cut, p, vertex_bytes_model(g),
-                                              backend=map_backend)
-    mapping = memory_centric_mapping(comm, shared,
-                                     machine or Machine.for_clusters(p),
-                                     backend=map_backend)
-    rep = simulate(g, cut, mapping, backend=map_backend)
+    with obs.span("plan.map", cat="section", backend=map_backend):
+        comm, shared = cluster_interaction_graphs(
+            cut, p, vertex_bytes_model(g), backend=map_backend)
+        mapping = memory_centric_mapping(comm, shared,
+                                         machine or Machine.for_clusters(p),
+                                         backend=map_backend)
+    with obs.span("plan.simulate", cat="section", backend=map_backend):
+        rep = simulate(g, cut, mapping, backend=map_backend)
     return PlanReport(graph=g, cut=cut, exec_time=rep.exec_time,
                       comm_bytes=rep.data_comm_bytes, p=p)
 

@@ -37,6 +37,7 @@ import os
 
 import numpy as np
 
+from .. import obs
 from ._arrayops import star_triples
 from .graph import IRGraph
 from .mapping import (Machine, MappingResult, cluster_interaction_graphs,
@@ -90,9 +91,11 @@ def simulate(g: IRGraph, partition, mapping: MappingResult,
     """
     backend = resolve_mapping_backend(backend)
     if isinstance(partition, VertexCutResult):
-        return _simulate_vertex_cut(g, partition, mapping, backend)
+        with obs.span("sim.run", backend=backend, kind="vertex"):
+            return _simulate_vertex_cut(g, partition, mapping, backend)
     if isinstance(partition, EdgeCutResult):
-        return _simulate_edge_cut(g, partition, mapping)
+        with obs.span("sim.run", backend=backend, kind="edge"):
+            return _simulate_edge_cut(g, partition, mapping)
     raise TypeError(f"unsupported partition type {type(partition)}")
 
 
@@ -262,7 +265,8 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
                  machine: Machine | None = None, seed: int = 0,
                  backend: str = "fast", workers: int = 1,
                  merge_period: "int | None" = None,
-                 divergence: "float | None" = None):
+                 divergence: "float | None" = None,
+                 profile: "str | None" = None):
     """partition -> map -> simulate, returning (partition, mapping, report).
 
     The end-to-end path of Fig. 1: structure analysis is already in `g`
@@ -280,44 +284,72 @@ def run_pipeline(g, p: int, method: str, lam: float = 1.0,
     simulator run their reference oracle iff `backend == "reference"`
     and the Pallas segment-sum layer iff `backend == "pallas"`
     (interpret mode on CPU — see README Backends).
+
+    `profile="out.json"` records the run's telemetry (ingest /
+    partition / map / simulate stage spans plus every engine-level span
+    beneath them) and writes a Perfetto-loadable profile to that path —
+    the call-site twin of the `REPRO_PROFILE` env hook; render it with
+    `python -m repro.obs summarize out.json`.  See docs/observability.md.
     """
+    if profile is not None:
+        with obs.profiled(profile):
+            return _run_pipeline_impl(g, p, method, lam, machine, seed,
+                                      backend, workers, merge_period,
+                                      divergence)
+    return _run_pipeline_impl(g, p, method, lam, machine, seed, backend,
+                              workers, merge_period, divergence)
+
+
+def _run_pipeline_impl(g, p: int, method: str, lam: float,
+                       machine: "Machine | None", seed: int, backend: str,
+                       workers: int, merge_period: "int | None",
+                       divergence: "float | None"):
     from .edge_cut import EDGE_CUT_METHODS, edge_cut as _edge_cut
     from .vertex_cut import ALGORITHMS, vertex_cut as _vertex_cut
     from .mapping import memory_centric_mapping
 
-    if backend == "dist" and isinstance(g, (str, os.PathLike)) \
-            and not os.fspath(g).endswith(".npz"):
-        from ..dist import dist_ingest
-        g = dist_ingest(g, workers=workers)
-    g = coerce_graph(g)
+    with obs.span("pipeline.ingest", cat="section", backend=backend):
+        if backend == "dist" and isinstance(g, (str, os.PathLike)) \
+                and not os.fspath(g).endswith(".npz"):
+            from ..dist import dist_ingest
+            g = dist_ingest(g, workers=workers)
+        g = coerce_graph(g)
 
     machine = machine or Machine.for_clusters(p)
     map_backend = resolve_mapping_backend(backend)
     if method in ALGORITHMS:
-        if backend == "dist":
-            from ..dist import dist_vertex_cut
-            part = dist_vertex_cut(g, p, method=method, lam=lam, seed=seed,
-                                   workers=workers,
-                                   merge_period=merge_period,
-                                   divergence=divergence)
-        else:
-            part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
-                               backend=backend)
-        comm, shared = cluster_interaction_graphs(
-            part, p, vertex_bytes_model(g), backend=map_backend)
-        mapping = memory_centric_mapping(comm, shared, machine,
-                                         backend=map_backend)
+        with obs.span("pipeline.partition", cat="section", backend=backend,
+                      method=method, p=p):
+            if backend == "dist":
+                from ..dist import dist_vertex_cut
+                part = dist_vertex_cut(g, p, method=method, lam=lam,
+                                       seed=seed, workers=workers,
+                                       merge_period=merge_period,
+                                       divergence=divergence)
+            else:
+                part = _vertex_cut(g, p, method=method, lam=lam, seed=seed,
+                                   backend=backend)
+        with obs.span("pipeline.map", cat="section", backend=map_backend):
+            comm, shared = cluster_interaction_graphs(
+                part, p, vertex_bytes_model(g), backend=map_backend)
+            mapping = memory_centric_mapping(comm, shared, machine,
+                                             backend=map_backend)
     elif method in EDGE_CUT_METHODS:
-        part = _edge_cut(g, p, method=method, seed=seed)
-        # inter-cluster comm graph from cut edges (one line per dependency)
-        comm = np.zeros((p, p))
-        cu, cv = part.parts[g.src], part.parts[g.dst]
-        cross = cu != cv
-        np.add.at(comm, (cu[cross], cv[cross]), CACHE_LINE)
-        comm = comm + comm.T
-        mapping = memory_centric_mapping(comm, np.zeros_like(comm), machine,
-                                         backend=map_backend)
+        with obs.span("pipeline.partition", cat="section", backend=backend,
+                      method=method, p=p):
+            part = _edge_cut(g, p, method=method, seed=seed)
+        with obs.span("pipeline.map", cat="section", backend=map_backend):
+            # inter-cluster comm graph from cut edges (one line per
+            # dependency)
+            comm = np.zeros((p, p))
+            cu, cv = part.parts[g.src], part.parts[g.dst]
+            cross = cu != cv
+            np.add.at(comm, (cu[cross], cv[cross]), CACHE_LINE)
+            comm = comm + comm.T
+            mapping = memory_centric_mapping(comm, np.zeros_like(comm),
+                                             machine, backend=map_backend)
     else:
         raise ValueError(f"unknown method {method!r}")
-    report = simulate(g, part, mapping, backend=map_backend)
+    with obs.span("pipeline.simulate", cat="section", backend=map_backend):
+        report = simulate(g, part, mapping, backend=map_backend)
     return part, mapping, report

@@ -57,6 +57,7 @@ import heapq
 
 import numpy as np
 
+from .. import obs
 from ._arrayops import replica_csr
 from ._native import native_available, native_engine
 from .graph import IRGraph
@@ -518,11 +519,13 @@ def _stream_fast(n: int, p: int, src: np.ndarray, dst: np.ndarray,
                 "native backend requested but no C compiler is available "
                 "(or REPRO_NO_NATIVE is set); use backend='fast'")
     if engine is not None:
-        engine(run, m, su, sv, w, p, rule_pg, bound, loads, masks, limbs,
-               rem, out)
+        with obs.span("cut.stream", engine="native", edges=m):
+            engine(run, m, su, sv, w, p, rule_pg, bound, loads, masks,
+                   limbs, rem, out)
     else:
-        _stream_python(run, m, su, sv, w, p, rule_pg, bound, loads, masks,
-                       limbs, rem, out)
+        with obs.span("cut.stream", engine="python", edges=m):
+            _stream_python(run, m, su, sv, w, p, rule_pg, bound, loads,
+                           masks, limbs, rem, out)
 
     assignment = np.empty(m, dtype=np.int32)
     assignment[perm] = out
@@ -718,6 +721,13 @@ def _stream_python(start: int, m: int, su_a: np.ndarray, sv_a: np.ndarray,
 def _finalize(g: IRGraph, method: str, p: int, lam: float,
               assignment: np.ndarray,
               backend: str = "fast") -> VertexCutResult:
+    with obs.span("cut.finalize", backend=backend):
+        return _finalize_impl(g, method, p, lam, assignment, backend)
+
+
+def _finalize_impl(g: IRGraph, method: str, p: int, lam: float,
+                   assignment: np.ndarray,
+                   backend: str = "fast") -> VertexCutResult:
     if backend == "pallas":
         # replica CSR through the shared _arrayops dispatch; loads and
         # edge counts through the segment-sum kernel (keyed_sum's

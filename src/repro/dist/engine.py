@@ -72,6 +72,7 @@ from time import perf_counter
 
 import numpy as np
 
+from .. import obs
 from ..core.vertex_cut import (ALGORITHMS, ShardCutState, VertexCutResult,
                                resolve_backend, vertex_cut)
 from ..core._arrayops import (masks_to_replica_csr, merge_deltas,
@@ -109,12 +110,15 @@ class _SerialPool:
                                             engine)
                        for _ in range(nshards)]
 
-    def run_round(self, jobs) -> "list[float]":
+    def run_round(self, jobs) -> "list[tuple[float, float]]":
+        """Returns one (t0, us) pair per job: the absolute perf_counter
+        start (seconds) and duration (µs) of the worker's stream_chunk —
+        the coordinator turns them into per-lane telemetry spans."""
         us = []
         for s, su, sv, w, out in jobs:
             t0 = perf_counter()
             self.states[s].stream_chunk(su, sv, w, out)
-            us.append((perf_counter() - t0) * 1e6)
+            us.append((t0, (perf_counter() - t0) * 1e6))
         return us
 
     def local_loads(self) -> "list[np.ndarray]":
@@ -154,12 +158,12 @@ class _ThreadPool(_SerialPool):
         super().__init__(*args)
         self._ex = ThreadPoolExecutor(max_workers=len(self.states))
 
-    def run_round(self, jobs) -> "list[float]":
+    def run_round(self, jobs) -> "list[tuple[float, float]]":
         def go(job):
             s, su, sv, w, out = job
             t0 = perf_counter()
             self.states[s].stream_chunk(su, sv, w, out)
-            return (perf_counter() - t0) * 1e6
+            return (t0, (perf_counter() - t0) * 1e6)
 
         return list(self._ex.map(go, jobs))
 
@@ -182,11 +186,14 @@ def _cut_worker_main(conn, n: int, p: int, deg, bound: float,
             tag = msg[0]
             if tag == "chunk":
                 su, sv, w = msg[1], msg[2], msg[3]
+                # t0 rides home with the result: perf_counter is
+                # CLOCK_MONOTONIC (system-wide), so the coordinator can
+                # place this span on the worker's telemetry lane
                 out = np.empty(len(su), dtype=np.int32)
                 t0 = perf_counter()
                 st.stream_chunk(su, sv, w, out)
                 us = (perf_counter() - t0) * 1e6
-                conn.send(("out", out, st.loads.copy(), us))
+                conn.send(("out", out, st.loads.copy(), t0, us))
             elif tag == "adopt":
                 st.adopt(msg[1], msg[2], msg[3])
             elif tag == "adopt_loads":
@@ -247,15 +254,15 @@ class _ProcessPool:
             raise RuntimeError(f"dist cut worker {s} failed: {msg[1]}")
         return msg
 
-    def run_round(self, jobs) -> "list[float]":
+    def run_round(self, jobs) -> "list[tuple[float, float]]":
         for s, su, sv, w, _out in jobs:
             self._conns[s].send(("chunk", su, sv, w))
         us = []
         for s, _su, _sv, _w, out in jobs:
-            _tag, chunk_out, loads, chunk_us = self._recv(s)
+            _tag, chunk_out, loads, chunk_t0, chunk_us = self._recv(s)
             out[:] = chunk_out
             self._loads[s] = loads
-            us.append(chunk_us)
+            us.append((chunk_t0, chunk_us))
         return us
 
     def local_loads(self) -> "list[np.ndarray]":
@@ -328,16 +335,19 @@ def _resolve_worker_pool(pool: str, engine: str, nshards: int) -> str:
 
 
 def _make_pool(kind: str, nshards: int, n: int, p: int, deg: np.ndarray,
-               bound: float, libra_rule: bool, engine: str):
+               bound: float, libra_rule: bool, engine: str,
+               stacklevel: int = 3):
     cls = {"serial": _SerialPool, "thread": _ThreadPool,
            "process": _ProcessPool}[kind]
     try:
         return cls(nshards, n, p, deg, bound, libra_rule, engine)
     except (ImportError, OSError) as exc:
         if kind == "process":
+            # stacklevel points past dist_vertex_cut (and _pipelined_cut
+            # when routed through it) at the user's call site
             warnings.warn(f"dist process pool unavailable ({exc}); "
                           "falling back to serial rounds", RuntimeWarning,
-                          stacklevel=3)
+                          stacklevel=stacklevel)
             return _SerialPool(nshards, n, p, deg, bound, libra_rule, engine)
         raise
 
@@ -496,8 +506,10 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
     rounds_tl: "list | None" = [] if timeline is not None else None
 
     pool = _make_pool(pool_kind, workers, 0, p, np.zeros(0, np.int64),
-                      float("inf"), True, engine)
+                      float("inf"), True, engine, stacklevel=4)
     ctrl = _MergeController(p, None, divergence)
+    col = obs.current()
+    shard_i = 0
     try:
         t_parse0 = perf_counter()
         with open_shard_parses(tasks, "auto", "bytes") as shard_iter:
@@ -510,8 +522,21 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                     if sh is None:
                         exhausted = True
                     else:
-                        backlog.push(*merger.add(sh))
+                        if col is not None and sh.events:
+                            # parse spans were timed inside the (possibly
+                            # remote) parse worker; land them on a lane
+                            # keyed by shard order, which the worker
+                            # itself does not know
+                            for ev in sh.events:
+                                ev["lane"] = f"parse/p{shard_i}"
+                            col.absorb_events(sh.events)
+                        shard_i += 1
+                        with obs.span("parse.merge", lane="coord"):
+                            backlog.push(*merger.add(sh))
                 parse_wait_us = (perf_counter() - t0) * 1e6
+                obs.complete("dist.parse_wait", t0,
+                             t0 + parse_wait_us / 1e6, lane="coord",
+                             cat="wait", round=len(outs))
                 if backlog.size == 0:
                     break
                 src_r, dst_r, w_r = backlog.pop(round_edges)
@@ -548,16 +573,25 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                         jobs.append((s, su[a:b], sv[a:b], wl[a:b],
                                      out_r[a:b]))
                 cut_us = pool.run_round(jobs)
+                r = len(outs)
+                for (s, _su, _sv, _w, _out), (ct0, cus) in zip(jobs, cut_us):
+                    obs.complete("dist.cut", ct0, ct0 + cus / 1e6,
+                                 lane=f"cut/w{s}", round=r)
+                obs.counter("dist.edges", k)
                 outs.append(out_r)
                 t1 = perf_counter()
                 more = backlog.size > 0 or not exhausted
                 full = ctrl.round_merge(pool) if more else False
+                merge_us = (perf_counter() - t1) * 1e6
+                if more:
+                    obs.complete("dist.merge", t1, t1 + merge_us / 1e6,
+                                 lane="coord", round=r, full=bool(full))
                 if rounds_tl is not None:
                     rounds_tl.append({
-                        "round": len(outs) - 1, "edges": k,
+                        "round": r, "edges": k,
                         "parse_wait_us": round(parse_wait_us, 1),
-                        "cut_us": [round(u, 1) for u in cut_us],
-                        "merge_us": round((perf_counter() - t1) * 1e6, 1),
+                        "cut_us": [round(u, 1) for _t, u in cut_us],
+                        "merge_us": round(merge_us, 1),
                         "full_merge": bool(full)})
         parse_us = (perf_counter() - t_parse0) * 1e6
         g, _stats = merger.finish(_source_name(path, None))
@@ -572,6 +606,10 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
     with ThreadPoolExecutor(max_workers=_FINALIZE_SHARDS) as ex:
         result = _finalize_from_masks(g, method, p, lam, assignment, masks,
                                       executor=ex)
+    finalize_us = (perf_counter() - t2) * 1e6
+    obs.complete("dist.finalize", t2, t2 + finalize_us / 1e6, lane="coord")
+    obs.counter("dist.full_merges", ctrl.full_merges)
+    obs.counter("dist.round_merges", ctrl.round_merges)
     if timeline is not None:
         timeline.update({
             "mode": "pipelined", "pool": pool.kind, "engine": engine,
@@ -580,7 +618,7 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
             "full_merges": ctrl.full_merges,
             "round_merges": ctrl.round_merges,
             "parse_and_cut_us": round(parse_us, 1),
-            "finalize_us": round((perf_counter() - t2) * 1e6, 1)})
+            "finalize_us": round(finalize_us, 1)})
     return result
 
 
@@ -634,9 +672,13 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
       parse_workers: byte-range parse shard count for the pipelined
         dataflow (default: `workers`).  Parse sharding never affects
         the output — rounds cover global edge offsets.
-      timeline: optional dict the engine fills with per-round,
-        per-worker phase timings (parse/cut/merge/finalize) — the
-        `dist_scaling` bench publishes it into CI artifacts.
+      timeline: legacy back-compat shim — an optional dict the engine
+        fills with per-round, per-worker phase timings
+        (parse/cut/merge/finalize), built from the same measurements
+        the engine now emits as `repro.obs` telemetry spans.  New code
+        should activate a collector (`REPRO_PROFILE=out.json` or
+        `obs.scoped()`) and read the profile instead; see
+        docs/observability.md.
 
     Everything else matches `vertex_cut`.
     """
@@ -694,6 +736,8 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
         else:
             from .parse import dist_ingest
             g = dist_ingest(path, workers=workers)
+        obs.complete("dist.ingest", t_ingest0, perf_counter(), lane="coord",
+                     cat="section", source=os.path.basename(path))
     ingest_us = (perf_counter() - t_ingest0) * 1e6
 
     if method == "random":
@@ -747,9 +791,10 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
             # single shard: the chunked resumable path is bit-identical
             # to one uninterrupted _stream_fast pass (no merges to run)
             st = wpool.states[0]
-            for a in range(0, m, merge_period):
-                b = min(a + merge_period, m)
-                st.stream_chunk(su[a:b], sv[a:b], w[a:b], out[a:b])
+            with obs.span("dist.cut", lane="cut/w0", rounds=1):
+                for a in range(0, m, merge_period):
+                    b = min(a + merge_period, m)
+                    st.stream_chunk(su[a:b], sv[a:b], w[a:b], out[a:b])
         else:
             shard_len = max(bounds[s + 1] - bounds[s]
                             for s in range(nshards))
@@ -763,13 +808,20 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
                         jobs.append((s, su[a:b], sv[a:b], w[a:b],
                                      out[a:b]))
                 cut_us = wpool.run_round(jobs)
+                for (s, _su, _sv, _w, _o), (ct0, cus) in zip(jobs, cut_us):
+                    obs.complete("dist.cut", ct0, ct0 + cus / 1e6,
+                                 lane=f"cut/w{s}", round=r)
                 t1 = perf_counter()
                 full = ctrl.round_merge(wpool) if r + 1 < rounds else False
+                merge_us = (perf_counter() - t1) * 1e6
+                if r + 1 < rounds:
+                    obs.complete("dist.merge", t1, t1 + merge_us / 1e6,
+                                 lane="coord", round=r, full=bool(full))
                 if rounds_tl is not None:
                     rounds_tl.append({
                         "round": r,
-                        "cut_us": [round(u, 1) for u in cut_us],
-                        "merge_us": round((perf_counter() - t1) * 1e6, 1),
+                        "cut_us": [round(u, 1) for _t, u in cut_us],
+                        "merge_us": round(merge_us, 1),
                         "full_merge": bool(full)})
         t2 = perf_counter()
         _rems, masks_list = wpool.collect_rm()
@@ -782,6 +834,7 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
     with ThreadPoolExecutor(max_workers=_FINALIZE_SHARDS) as ex:
         result = _finalize_from_masks(g, method, p, lam, assignment, masks,
                                       executor=ex)
+    obs.complete("dist.finalize", t2, perf_counter(), lane="coord")
     if timeline is not None:
         timeline.update({
             "mode": "two-phase", "pool": wpool.kind, "engine": engine,

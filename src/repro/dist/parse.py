@@ -40,9 +40,11 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
+from time import perf_counter
 
 import numpy as np
 
+from .. import obs
 from ..core.graph import IRGraph
 from ..trace.ingest import (DEFAULT_CHUNK_EDGES, TraceStats, _open_lines,
                             _source_name, _StreamBuilder, CFG, load_cfg)
@@ -118,6 +120,10 @@ class ShardParse:
     counters: dict                # TraceStats fields to sum/max
     fns: set                      # function names seen
     bbs: set                      # (fn, bb) pairs seen
+    # telemetry spans timed inside the (possibly remote) parse worker;
+    # the merging coordinator absorbs them into the active collector,
+    # rewriting the lane to the shard's stream position
+    events: list = dataclasses.field(default_factory=list)
 
 
 class _ShardBuilder(_StreamBuilder):
@@ -265,11 +271,20 @@ def _parse_shard(task) -> ShardParse:
     lines = (_iter_range_lines(path, start, end) if text is None
              else _iter_block_lines(text))
     parse_line, add_record = b.parse_line, b.add_record
+    t0 = perf_counter()
     for lineno, line in enumerate(lines, start=1):
         rec = parse_line(lineno, line)
         if rec is not None:
             add_record(lineno, rec)
-    return b.finalize_shard()
+    sp = b.finalize_shard()
+    # one span per shard, recorded unconditionally (a dict per shard is
+    # noise-free): perf_counter is system-wide, so the coordinator can
+    # splice worker-process spans into its own profile
+    sp.events.append({
+        "name": "parse.shard", "ph": "X", "ts": t0 * 1e6,
+        "dur": (perf_counter() - t0) * 1e6, "lane": "parse", "cat": "op",
+        "args": {"lines": sp.counters["lines"], "edges": int(len(sp.src))}})
+    return sp
 
 
 # ---------------------------------------------------------------------- #
@@ -437,9 +452,15 @@ def dist_ingest_with_stats(source, *, workers: int = 1,
     tasks = _shard_tasks(source, workers, weight_model, chunk_edges,
                          keep_labels, cfg, on_error, pool)
     mg = ShardMerger(resolve_weight_model(weight_model), keep_labels)
+    col = obs.current()
     with open_shard_parses(tasks, pool, weight_model) as shards:
-        for sh in shards:
-            mg.add(sh)
+        for i, sh in enumerate(shards):
+            if col is not None and sh.events:
+                for ev in sh.events:
+                    ev["lane"] = f"parse/p{i}"
+                col.absorb_events(sh.events)
+            with obs.span("parse.merge", lane="coord"):
+                mg.add(sh)
     return mg.finish(_source_name(source, name))
 
 

@@ -1,0 +1,49 @@
+"""repro.obs — structured telemetry (spans, counters, Perfetto export).
+
+Quick start::
+
+    from repro import obs
+
+    with obs.scoped() as col:
+        with obs.span("my.phase", lane="main", k=3):
+            ...
+    from repro.obs.export import write_profile
+    write_profile("out.json", col)           # open in ui.perfetto.dev
+
+Or set ``REPRO_PROFILE=out.json`` in the environment to profile a whole
+process, then ``python -m repro.obs summarize out.json``.
+
+See docs/observability.md for the full API and event taxonomy.
+"""
+
+from .core import (
+    PROFILE_ENV,
+    Collector,
+    complete,
+    counter,
+    current,
+    disable,
+    enable,
+    enabled,
+    event,
+    gauge,
+    profiled,
+    scoped,
+    span,
+)
+
+__all__ = [
+    "Collector",
+    "PROFILE_ENV",
+    "complete",
+    "counter",
+    "current",
+    "disable",
+    "enable",
+    "enabled",
+    "event",
+    "gauge",
+    "profiled",
+    "scoped",
+    "span",
+]

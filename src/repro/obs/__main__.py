@@ -1,0 +1,37 @@
+"""``python -m repro.obs summarize out.json`` — render a profile.
+
+Prints the phase table (count, total, mean, % wall, critical-path
+contribution), the wall-time decomposition into parallel / serial /
+idle, per-lane utilization, and the measured serial fraction with its
+Amdahl speedup bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .export import events_from_chrome, load_profile
+from .summarize import render_summary, summarize_events
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("summarize", help="render a profile JSON as a phase table")
+    s.add_argument("profile", help="path written by REPRO_PROFILE / profile=")
+    args = ap.parse_args(argv)
+
+    doc = load_profile(args.profile)
+    events = events_from_chrome(doc)
+    if not events:
+        print(f"{args.profile}: no events", file=sys.stderr)
+        return 1
+    counters = doc.get("repro", {}).get("counters", {})
+    print(f"profile: {args.profile}  ({len(events)} events)")
+    print(render_summary(summarize_events(events), counters))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -90,6 +90,10 @@ def main(argv=None) -> int:
                          "defer full state merges until the per-cluster "
                          "load drift exceeds this fraction of the mean "
                          "cluster load (default: merge every round)")
+    sp.add_argument("--profile", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable telemetry profile of "
+                         "the ingest+partition run (render with `python "
+                         "-m repro.obs summarize OUT.json`)")
 
     sp = sub.add_parser("record",
                         help="write a JAX demo program's trace as NDJSON")
@@ -119,14 +123,23 @@ def main(argv=None) -> int:
         print(f"wrote {args.out}: {g.num_vertices} vertices, "
               f"{g.num_edges} edges ({stats.records} records)")
     elif args.cmd == "partition":
+        import contextlib
+
+        from .. import obs
         from ..core.planner import plan_graph
-        g, _ = _ingest(args)
-        backend = "dist" if args.workers > 1 else args.backend
-        report = plan_graph(g, args.clusters, method=args.method,
-                            lam=args.lam, backend=backend,
-                            workers=args.workers,
-                            divergence=args.divergence)
+        prof = (obs.profiled(args.profile) if args.profile
+                else contextlib.nullcontext())
+        with prof:
+            g, _ = _ingest(args)
+            backend = "dist" if args.workers > 1 else args.backend
+            report = plan_graph(g, args.clusters, method=args.method,
+                                lam=args.lam, backend=backend,
+                                workers=args.workers,
+                                divergence=args.divergence)
         print(json.dumps(report.summary(), indent=2, default=float))
+        if args.profile:
+            print(f"profile: {args.profile} (python -m repro.obs "
+                  f"summarize {args.profile})", file=sys.stderr)
     elif args.cmd == "record":
         fn, fargs = demo_program(args.program)
         lines = record_fn(fn, *fargs, out=args.out, name=args.program)

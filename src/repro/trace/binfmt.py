@@ -244,7 +244,11 @@ def read_trace_bin(path, keep_labels: bool = False):
     stats re-tagged with `engine="binary"` (or fresh zeroed stats when
     the writer had none).
     """
+    from time import perf_counter
+
+    from .. import obs
     from .ingest import TraceStats          # local import: no cycle at load
+    t0 = perf_counter()
     f = _open_bin(path, "rb")
     try:
         header = _read_header(f, path)
@@ -286,4 +290,13 @@ def read_trace_bin(path, keep_labels: bool = False):
         if hasattr(TraceStats, "__dataclass_fields__") else set()
     stats = TraceStats(**{k: v for k, v in st.items() if k in known})
     stats.engine = "binary"
+    if obs.enabled():
+        t1 = perf_counter()
+        try:
+            nbytes = os.path.getsize(path)
+        except OSError:
+            nbytes = 0
+        obs.complete("trace.ingest", t0, t1, engine="binary",
+                     bytes=int(nbytes), edges=m,
+                     edges_per_s=round(m / max(t1 - t0, 1e-9)))
     return g, stats

@@ -31,9 +31,11 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+from time import perf_counter
 
 import numpy as np
 
+from .. import obs
 from ..core.graph import IRGraph
 from .schema import CFG_KINDS, TraceFormatError, type_bytes
 from .weights import resolve_weight_model
@@ -456,6 +458,7 @@ def ingest_trace_with_stats(source, *, weight_model="bytes",
         return scanned
     b = _StreamBuilder(resolve_weight_model(weight_model), chunk_edges,
                        keep_labels, cfg, on_error)
+    t0 = perf_counter()
     lines, close = _open_lines(source)
     try:
         parse_line, add_record = b.parse_line, b.add_record
@@ -465,7 +468,19 @@ def ingest_trace_with_stats(source, *, weight_model="bytes",
                 add_record(lineno, rec)
     finally:
         close()
-    return b.finalize(_source_name(source, name))
+    out = b.finalize(_source_name(source, name))
+    if obs.enabled():
+        t1 = perf_counter()
+        m = int(out[0].num_edges)
+        try:
+            nbytes = (os.path.getsize(source)
+                      if isinstance(source, (str, os.PathLike)) else 0)
+        except OSError:
+            nbytes = 0
+        obs.complete("trace.ingest", t0, t1, engine="stream",
+                     bytes=int(nbytes), edges=m,
+                     edges_per_s=round(m / max(t1 - t0, 1e-9)))
+    return out
 
 
 def ingest_trace(source, **kw) -> IRGraph:

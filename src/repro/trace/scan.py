@@ -35,9 +35,11 @@ inputs are judged by their on-disk size).  Set ``REPRO_TRACE_SCANNER=0``
 from __future__ import annotations
 
 import os
+from time import perf_counter
 
 import numpy as np
 
+from .. import obs
 from ..core.graph import IRGraph
 from .schema import type_bytes
 from .weights import resolve_weight_model
@@ -114,26 +116,40 @@ def try_scan_ingest(source, *, weight_model="bytes", on_error="raise",
     if mode == "off":
         return None
     if cfg is not None or on_error != "raise":
+        obs.event("trace.scan_fallback", reason="cfg_or_on_error")
         return None
     if not isinstance(weight_model, str):
         # user callables may be stateful; the scanner evaluates weights
         # per unique triple, which is only sound for pure models
+        obs.event("trace.scan_fallback", reason="weight_model_callable")
         return None
     if not isinstance(source, (str, os.PathLike)):
+        obs.event("trace.scan_fallback", reason="not_a_path")
         return None
     path = os.fspath(source)
     if mode == "auto" and not _scan_size_ok(path):
+        obs.event("trace.scan_fallback", reason="size_budget")
         return None
     try:
         data = _read_all(path)
     except (_Fallback, OSError):
+        obs.event("trace.scan_fallback", reason="read_error")
         return None
     from .ingest import _source_name
+    t0 = perf_counter()
     try:
-        return _scan_bytes(data, resolve_weight_model(weight_model),
-                           keep_labels, _source_name(source, name))
+        out = _scan_bytes(data, resolve_weight_model(weight_model),
+                          keep_labels, _source_name(source, name))
     except _Fallback:
+        obs.event("trace.scan_fallback", reason="structure")
         return None
+    if obs.enabled():
+        t1 = perf_counter()
+        m = int(out[0].num_edges)
+        obs.complete("trace.ingest", t0, t1, engine="scan",
+                     bytes=len(data), edges=m,
+                     edges_per_s=round(m / max(t1 - t0, 1e-9)))
+    return out
 
 
 def _read_all(path: str) -> bytes:
