@@ -1,0 +1,160 @@
+"""Plan service: content-addressed cache + incremental repartitioning.
+
+Serving-regime throughput of `repro.serve` on the 276k-line trace
+(>= 510k edges, the partitioner_scaling headline scale):
+
+  * ``cold`` — first request through `PlanService`: parse + cut + map +
+    simulate + persist.  Tagged ``backend=reference`` so it doubles as
+    the host-speed calibration probe for `check_regression.py` (it is
+    the plain sequential pipeline; its engine rarely changes).
+  * ``cache_hit`` — the same request again on the same service: the
+    fingerprint resolves in the hot map, nothing is parsed or cut.
+  * ``warm_restart`` — a *fresh* service over the same cache directory:
+    the bundle is reloaded from the `checkpoint.store` files on disk.
+  * ``incremental_cold`` — `IncrementalPlanner` fed the whole trace in
+    one window, then `plan()`.
+  * ``incremental_warm`` — a planner pre-fed the first 90% of the trace
+    (state warm, durable CSR built); timed portion appends the last 10%
+    window and re-plans.  Only dirty replica-CSR rows are re-decoded.
+
+Gates (`benchmarks/baselines/plan_service.json` + CI):
+  * meta.speedup_cache_hit = cold / cache_hit >= 50x (a hit must cost
+    dictionary-lookup time, not pipeline time);
+  * meta.speedup_incremental = incremental_cold / incremental_warm >=
+    3x (re-planning a 10% window must not pay the full-recut price);
+  * replication_factor per row at quality factor 1.01 — every stage is
+    deterministic, so any drift means the algorithm changed.
+
+Bit-identity is asserted outright, not gated: the cache-hit and
+warm-restart bundles must equal the cold bundle array-for-array, and
+the warm incremental plan must equal the cold incremental plan over the
+concatenated trace (the `repro.serve` window-invariance contract).
+"""
+from __future__ import annotations
+
+import io
+import os
+import shutil
+
+import numpy as np
+
+from repro.serve import IncrementalPlanner, PlanRequest, PlanService
+
+from .common import emit, timed_best, write_bench_json
+
+CACHE_DIR = ".cache/traces"
+PLAN_CACHE = ".cache/plans_bench"
+LINES = 276_000          # ingests to >= 510k edges (headline scale)
+CUT_P = 64
+LAM = 1.1
+WARM_FRACTION = 0.9      # pre-fed share for the incremental_warm stage
+HIT_REPEATS = 5          # hits are cheap and idempotent: best-of-5
+
+
+def _trace_path(lines: int) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"synth_{lines}_seed0.ndjson")
+    if not os.path.exists(path):
+        from repro.trace import synthesize_trace
+        synthesize_trace(path, lines, seed=0)
+    return path
+
+
+def _row(stage: str, backend: str, edges: int, us: float,
+         rf: float) -> dict:
+    row = {"lines": LINES, "stage": stage, "backend": backend,
+           "edges": edges, "us_total": round(us, 1),
+           "replication_factor": round(rf, 4)}
+    emit(f"plan_service/{stage}", us, f"rf={rf:.4f}")
+    return row
+
+
+def _assert_same_bundle(a, b, what: str) -> None:
+    for field in ("assignment", "loads", "replica_indptr", "replica_flat",
+                  "core_of"):
+        assert np.array_equal(getattr(a, field), getattr(b, field)), \
+            f"{what}: bundle field {field} diverged from the cold plan"
+    assert a.exec_time == b.exec_time and a.comm_bytes == b.comm_bytes, \
+        f"{what}: simulated cost diverged from the cold plan"
+
+
+def run() -> list[dict]:
+    path = _trace_path(LINES)
+    shutil.rmtree(PLAN_CACHE, ignore_errors=True)  # cold must be cold
+    rows = []
+    req = PlanRequest(source=path, p=CUT_P, method="wb_libra", lam=LAM)
+
+    svc = PlanService(cache_dir=PLAN_CACHE)
+    cold, us_cold = timed_best(lambda: svc.plan(req), repeats=1)
+    assert cold.cache == "cold"
+    m = int(cold.bundle.edge_counts.sum())
+    rows.append(_row("cold", "reference", m, us_cold,
+                     cold.bundle.replication_factor))
+
+    hit, us_hit = timed_best(lambda: svc.plan(req), repeats=HIT_REPEATS)
+    assert hit.cache == "memory"
+    _assert_same_bundle(hit.bundle, cold.bundle, "cache_hit")
+    rows.append(_row("cache_hit", "serve", m, us_hit,
+                     hit.bundle.replication_factor))
+
+    def restart():
+        return PlanService(cache_dir=PLAN_CACHE).plan(req)
+
+    warm, us_warm = timed_best(restart, repeats=HIT_REPEATS)
+    assert warm.cache == "disk"
+    _assert_same_bundle(warm.bundle, cold.bundle, "warm_restart")
+    rows.append(_row("warm_restart", "serve", m, us_warm,
+                     warm.bundle.replication_factor))
+
+    # ----- incremental repartitioning: 10% appended window ----- #
+    def inc_cold():
+        pl = IncrementalPlanner(p=CUT_P, method="wb_libra", lam=LAM)
+        pl.append(path)
+        return pl.plan()
+
+    (_, cut_c, _, rep_c), us_inc_cold = timed_best(inc_cold, repeats=1)
+    rows.append(_row("incremental_cold", "serve", m, us_inc_cold,
+                     cut_c.replication_factor))
+
+    with open(path) as f:
+        lines = f.read().splitlines(keepends=True)
+    split = int(len(lines) * WARM_FRACTION)
+    pl = IncrementalPlanner(p=CUT_P, method="wb_libra", lam=LAM)
+    pl.append(io.StringIO("".join(lines[:split])))
+    pl.plan()                       # builds the durable CSR (untimed)
+
+    def inc_warm():
+        pl.append(io.StringIO("".join(lines[split:])))
+        return pl.plan()
+
+    (_, cut_w, _, rep_w), us_inc_warm = timed_best(inc_warm, repeats=1)
+    rows.append(_row("incremental_warm", "serve", m, us_inc_warm,
+                     cut_w.replication_factor))
+    # the window-invariance contract: warm == cold recut, bit for bit
+    for field in ("assignment", "loads", "edge_counts", "replica_indptr",
+                  "replica_flat"):
+        assert np.array_equal(getattr(cut_w, field),
+                              getattr(cut_c, field)), \
+            f"incremental_warm: {field} diverged from the cold recut"
+    assert rep_w.exec_time == rep_c.exec_time, \
+        "incremental_warm: simulated cost diverged from the cold recut"
+
+    speedup_hit = us_cold / max(us_hit, 1e-9)
+    speedup_restart = us_cold / max(us_warm, 1e-9)
+    speedup_inc = us_inc_cold / max(us_inc_warm, 1e-9)
+    emit("plan_service/speedup_cache_hit", us_hit,
+         f"vs_cold={speedup_hit:.0f}x")
+    emit("plan_service/speedup_incremental", us_inc_warm,
+         f"vs_cold={speedup_inc:.2f}x")
+    write_bench_json("plan_service", rows,
+                     meta={"lines": LINES, "cut_p": CUT_P, "lam": LAM,
+                           "warm_fraction": WARM_FRACTION,
+                           "edges": m,
+                           "speedup_cache_hit": round(speedup_hit, 1),
+                           "speedup_warm_restart": round(speedup_restart, 1),
+                           "speedup_incremental": round(speedup_inc, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

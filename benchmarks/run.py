@@ -19,13 +19,13 @@ import time
 from . import (cluster_sweep, data_comm, dist_scaling, edge_imbalance,
                edge_order_ablation, exec_and_comm, execution_time,
                expert_placement, lambda_sensitivity, mapping_pipeline,
-               partitioner_scaling, replication_factor, roofline,
-               trace_ingest)
+               partitioner_scaling, plan_service, replication_factor,
+               roofline, trace_ingest)
 from .common import write_bench_json
 
 # suites that write their own BENCH_*.json with extra metadata
 SELF_WRITING = {"partitioner_scaling", "mapping_pipeline", "trace_ingest",
-                "dist_scaling"}
+                "dist_scaling", "plan_service"}
 # opt-in suites skipped by a default (no --only) run: their rows are a
 # re-sweep of exec_and_comm's combined pass
 OPT_IN = {"execution_time", "data_comm"}
@@ -49,6 +49,7 @@ SUITES = {
     "mapping_pipeline": lambda a: mapping_pipeline.run(),  # §5-§6 fast path
     "trace_ingest": lambda a: trace_ingest.run(),  # NDJSON front end
     "dist_scaling": lambda a: dist_scaling.run(),  # sharded workers sweep
+    "plan_service": lambda a: plan_service.run(),  # serve cache + increm.
     "edge_order_ablation": lambda a: edge_order_ablation.run(
         scale=a.scale, names=a.names),            # DESIGN §2 finding
     "cluster_sweep": lambda a: cluster_sweep.run(

@@ -1,14 +1,19 @@
-"""Checkpointing: per-shard npz + msgpack metadata, async save thread,
+"""Checkpointing: per-shard npz + JSON metadata, async save thread,
 keep-last-k retention, atomic rename, resume with re-sharding.
 
-Layout:  <dir>/step_<n>/shard_<i>.npz + meta.msgpack
-A checkpoint directory is only considered complete once `COMMIT` exists —
-a crash mid-save never corrupts the restore path (fault tolerance).
+Layout:  <dir>/step_<n>/shard_<i>.npz + meta.json
+A checkpoint directory is only considered complete once `COMMIT` exists
+AND the directory has been renamed from its `.tmp` staging name — a
+crash mid-save never corrupts the restore path (fault tolerance).
+Stale `*.tmp` staging dirs (even ones containing `COMMIT`, from a crash
+between the commit mark and the rename) are ignored by `all_steps()`
+and garbage-collected on startup.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any
@@ -17,6 +22,8 @@ import numpy as np
 import jax
 
 __all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
 
 
 def _flatten(tree) -> dict:
@@ -58,6 +65,15 @@ class CheckpointManager:
         self.num_shards = num_shards
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._async_exc: BaseException | None = None
+        self._gc_stale_tmp()
+
+    def _gc_stale_tmp(self) -> None:
+        """Remove `.tmp` staging dirs left by a crash mid-save."""
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp") and _STEP_RE.match(name[:-4]):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ #
     def _step_dir(self, step: int) -> str:
@@ -66,9 +82,10 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         steps = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and os.path.exists(
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(
                     os.path.join(self.dir, name, "COMMIT")):
-                steps.append(int(name.split("_")[1]))
+                steps.append(int(m.group(1)))
         return sorted(steps)
 
     def latest_step(self) -> int | None:
@@ -104,14 +121,24 @@ class CheckpointManager:
             self._write(step, state, meta or {})
         else:
             self.wait()
-            self._thread = threading.Thread(
-                target=self._write, args=(step, state, meta or {}))
+
+            def _run():
+                try:
+                    self._write(step, state, meta or {})
+                except BaseException as e:  # surfaced by wait()
+                    self._async_exc = e
+
+            self._thread = threading.Thread(target=_run)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the async writer; re-raise anything it raised."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        exc, self._async_exc = self._async_exc, None
+        if exc is not None:
+            raise exc
 
     # ------------------------------------------------------------------ #
     def restore(self, template: Any, step: int | None = None
@@ -127,3 +154,20 @@ class CheckpointManager:
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         return _unflatten_like(template, flat), meta
+
+    def restore_flat(self, step: int | None = None
+                     ) -> tuple[dict, dict]:
+        """Restore the flat {leaf-key: array} dict without a template.
+
+        For callers (e.g. the plan cache) whose state is already a flat
+        dict of arrays and who need no dtype/shape coercion."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        z = np.load(os.path.join(d, f"shard_{self.shard_id}.npz"),
+                    allow_pickle=False)
+        flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        return flat, meta

@@ -277,6 +277,18 @@ class ShardCutState:
         np.copyto(self.loads, loads)
         self.fresh = False
 
+    def clone(self) -> "ShardCutState":
+        """Deep copy: stream the copy without disturbing the original.
+
+        The incremental repartitioner (`repro.serve`) flushes a pending
+        edge tail into a clone at plan time, so the durable state only
+        ever advances by full round quanta."""
+        return ShardCutState(
+            p=self.p, limbs=self.limbs, bound=self.bound,
+            rule_pg=self.rule_pg, engine=self.engine,
+            loads=self.loads.copy(), masks=self.masks.copy(),
+            rem=self.rem.copy(), fresh=self.fresh)
+
     def grow(self, n: int) -> None:
         """Extend the state to an `n`-vertex graph (new rows empty).
 

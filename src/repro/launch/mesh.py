@@ -15,7 +15,24 @@ import numpy as np
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh_with_order"]
+__all__ = ["make_production_mesh", "make_mesh_with_order", "mesh_context"]
+
+
+def mesh_context(mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    Version-compat shim: the API moved from entering the `Mesh` object
+    itself, through `jax.sharding.use_mesh`, to `jax.set_mesh`.  All
+    three establish the same mesh context for `jax.jit` lowering, so we
+    take whichever the installed JAX provides (newest first).
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on older JAX
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -49,7 +49,6 @@ def main() -> None:
 
     # replay prompt to fill the cache
     t0 = time.time()
-    tok = prompts[:, 0]
     for t in range(args.prompt_len):
         nxt, cache = step(params, cache, prompts[:, t], jnp.int32(t))
     prefill_s = time.time() - t0

@@ -92,10 +92,11 @@ class TrainSupervisor:
     """Checkpoint/restart supervision around a step function."""
 
     def __init__(self, ckpt_manager, save_every: int = 50,
-                 max_restarts: int = 10):
+                 max_restarts: int = 10, save_blocking: bool = True):
         self.ckpt = ckpt_manager
         self.save_every = save_every
         self.max_restarts = max_restarts
+        self.save_blocking = save_blocking
         self.restarts = 0
         self.straggler = StragglerDetector()
 
@@ -119,7 +120,13 @@ class TrainSupervisor:
                 self.straggler.observe(step, time.time() - t0)
                 step += 1
                 if step % self.save_every == 0 or step == n_steps:
-                    self.ckpt.save(step, state, meta or {})
+                    # with save_blocking=False a failed async write
+                    # surfaces at the NEXT save's wait() — still inside
+                    # this try, so it takes the restart path below
+                    self.ckpt.save(step, state, meta or {},
+                                   blocking=self.save_blocking)
+                    if step == n_steps:
+                        self.ckpt.wait()
             except Exception:  # noqa: BLE001 — restart from checkpoint
                 self.restarts += 1
                 if self.restarts > self.max_restarts:

@@ -1,0 +1,172 @@
+"""The long-lived partition-plan service.
+
+`PlanService` answers plan requests for recurring graphs/traces from a
+two-tier content-addressed cache (`PlanCache`): requests fingerprint
+their *content* plus result-relevant knobs (`serve.fingerprint`), hits
+return the persisted (partition, mapping, cost) bundle without parsing
+or cutting anything, misses run the full planning pipeline once and
+persist the bundle through `checkpoint.store` — so restarts are warm
+and repeat traffic (the production regime: millions of users, few
+distinct programs) is served at dictionary-lookup cost.
+
+`plan_many` batches: requests are fingerprinted up front and duplicate
+fingerprints inside one batch plan once.
+
+Every phase is instrumented through `repro.obs`: cache hit/miss/store
+counters, fingerprint/load/plan spans — `REPRO_PROFILE=out.json` (or
+`obs.scoped()`) captures a serving profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from .. import obs
+from ..core.mapping import Machine
+from ..core.simulator import coerce_graph
+from ..core.vertex_cut import vertex_cut
+from .cache import PlanBundle, PlanCache
+from .fingerprint import plan_fingerprint
+from .incremental import finish_plan
+
+__all__ = ["PlanRequest", "PlanResponse", "PlanService",
+           "DEFAULT_CACHE_DIR"]
+
+DEFAULT_CACHE_DIR = ".cache/plans"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """One planning request: a graph source plus the planning knobs.
+
+    `source` is a path (NDJSON trace / `.rtb` / `.npz`) or an in-memory
+    `IRGraph`.  Knobs beyond (p, method, lam, seed) that change the
+    result — e.g. a non-default `edge_order` — go through the dedicated
+    fields so the fingerprint stays canonical.
+    """
+
+    source: object
+    p: int
+    method: str = "wb_libra"
+    lam: float = 1.0
+    seed: int = 0
+    edge_order: str = "auto"
+    weight_model: str = "bytes"
+
+
+@dataclasses.dataclass
+class PlanResponse:
+    fingerprint: str
+    cache: str                      # "cold" | "memory" | "disk"
+    bundle: PlanBundle
+
+    def summary(self) -> dict:
+        return {"fingerprint": self.fingerprint, "cache": self.cache,
+                **self.bundle.summary()}
+
+
+class PlanService:
+    """Content-addressed plan cache over the full planning pipeline."""
+
+    def __init__(self, cache_dir: str = DEFAULT_CACHE_DIR,
+                 backend: str = "fast", machine: "Machine | None" = None,
+                 use_stat_memo: bool = True):
+        self.cache = PlanCache(cache_dir)
+        self.backend = backend
+        self.machine = machine
+        self.use_stat_memo = use_stat_memo
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ #
+    def _fingerprint(self, req: PlanRequest) -> str:
+        with obs.span("serve.fingerprint", cat="op"):
+            return plan_fingerprint(
+                req.source, req.p, req.method, req.lam, seed=req.seed,
+                edge_order=req.edge_order, weight_model=req.weight_model,
+                use_stat_memo=self.use_stat_memo)
+
+    def _plan_cold(self, req: PlanRequest) -> PlanBundle:
+        with obs.span("serve.plan_cold", cat="section", p=req.p,
+                      method=req.method):
+            with obs.span("plan.cut", cat="section", backend=self.backend,
+                          p=req.p):
+                if isinstance(req.source, (str, os.PathLike)):
+                    from ..trace import load_graph
+                    g = load_graph(req.source,
+                                   weight_model=req.weight_model)
+                else:
+                    g = coerce_graph(req.source)
+                cut = vertex_cut(g, req.p, method=req.method, lam=req.lam,
+                                 seed=req.seed, edge_order=req.edge_order,
+                                 backend=self.backend)
+            mapping, rep = finish_plan(g, cut, self.machine, self.backend)
+        return PlanBundle(
+            assignment=cut.assignment, loads=cut.loads,
+            edge_counts=cut.edge_counts,
+            replica_indptr=cut.replica_indptr,
+            replica_flat=cut.replica_flat,
+            core_of=mapping.core_of, core_times=rep.core_times,
+            exec_time=rep.exec_time, comm_bytes=rep.data_comm_bytes,
+            graph_name=g.name, n_vertices=g.n,
+            total_weight=g.total_weight, p=req.p, method=req.method,
+            lam=req.lam)
+
+    # ------------------------------------------------------------------ #
+    def plan(self, req: PlanRequest) -> PlanResponse:
+        """Serve one request: cache hit or cold plan + persist."""
+        fp = self._fingerprint(req)
+        in_memory = fp in self.cache._hot
+        bundle = self.cache.get(fp)
+        if bundle is not None:
+            self.hits += 1
+            return PlanResponse(fingerprint=fp,
+                                cache="memory" if in_memory else "disk",
+                                bundle=bundle)
+        self.misses += 1
+        obs.counter("serve.cache_miss", 1)
+        bundle = self._plan_cold(req)
+        self.cache.put(fp, bundle)
+        return PlanResponse(fingerprint=fp, cache="cold", bundle=bundle)
+
+    def plan_many(self, requests) -> list:
+        """Batched serving; duplicate fingerprints plan once."""
+        requests = list(requests)
+        with obs.span("serve.plan_many", cat="section",
+                      requests=len(requests)):
+            responses: list = [None] * len(requests)
+            first_of: dict = {}
+            for i, req in enumerate(requests):
+                fp = self._fingerprint(req)
+                prior = first_of.get(fp)
+                if prior is not None:
+                    # in-batch duplicate: by the time we got here the
+                    # first occurrence has populated the hot map
+                    self.hits += 1
+                    responses[i] = PlanResponse(
+                        fingerprint=fp, cache="memory",
+                        bundle=responses[prior].bundle)
+                    continue
+                first_of[fp] = i
+                in_memory = fp in self.cache._hot
+                bundle = self.cache.get(fp)
+                if bundle is not None:
+                    self.hits += 1
+                    responses[i] = PlanResponse(
+                        fingerprint=fp,
+                        cache="memory" if in_memory else "disk",
+                        bundle=bundle)
+                    continue
+                self.misses += 1
+                obs.counter("serve.cache_miss", 1)
+                bundle = self._plan_cold(requests[i])
+                self.cache.put(fp, bundle)
+                responses[i] = PlanResponse(fingerprint=fp, cache="cold",
+                                            bundle=bundle)
+        return responses
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hot_entries": len(self.cache._hot),
+                "disk_entries": len(self.cache.fingerprints()),
+                "cache_dir": self.cache.root}

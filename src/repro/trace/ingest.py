@@ -45,8 +45,9 @@ try:                                    # optional accelerator, never required
 except ImportError:
     _json_loads = json.loads
 
-__all__ = ["TraceStats", "CFG", "ingest_trace", "ingest_trace_with_stats",
-           "replay_trace", "load_cfg", "load_graph"]
+__all__ = ["TraceStats", "CFG", "TraceSession", "ingest_trace",
+           "ingest_trace_with_stats", "replay_trace", "load_cfg",
+           "load_graph"]
 
 DEFAULT_CHUNK_EDGES = 1 << 16
 
@@ -391,6 +392,78 @@ class _StreamBuilder:
         g = IRGraph(n=self.n, src=src, dst=dst, w=w, name=name,
                     node_labels=self.labels)
         return g, stats
+
+
+# ---------------------------------------------------------------------- #
+# incremental multi-window sessions
+# ---------------------------------------------------------------------- #
+class TraceSession:
+    """Incremental NDJSON parsing: feed trace *windows*, keep one graph.
+
+    Each `feed(source)` call streams another window of the same logical
+    trace through the rolling def-tables of a single `_StreamBuilder`,
+    so vertex ids, loop-carried bindings, and edge order are exactly
+    those of one uninterrupted parse of the concatenated windows —
+    window boundaries never change the graph (the invariant the
+    incremental repartitioner's bit-identity contract rests on).
+
+    `feed` returns only the edges the window added (trace order), which
+    is what `repro.serve.IncrementalPlanner` streams into its resumable
+    cut state; `graph()` materialises the full concatenated graph.
+    """
+
+    def __init__(self, *, weight_model="bytes",
+                 chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                 on_error: str = "raise", keep_labels: bool = False):
+        self._b = _StreamBuilder(resolve_weight_model(weight_model),
+                                 chunk_edges, keep_labels, None, on_error)
+        self._cursor = 0            # batches already handed out by feed()
+        self.windows = 0
+
+    @property
+    def n(self) -> int:
+        """Vertices discovered so far."""
+        return self._b.n
+
+    def feed(self, source) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Parse one window; returns its (src, dst, w) edge arrays."""
+        b = self._b
+        lines, close = _open_lines(source)
+        try:
+            parse_line, add_record = b.parse_line, b.add_record
+            for lineno, line in enumerate(lines, start=1):
+                rec = parse_line(lineno, line)
+                if rec is not None:
+                    add_record(lineno, rec)
+        finally:
+            close()
+        b._flush()
+        new = b._batches[self._cursor:]
+        self._cursor = len(b._batches)
+        self.windows += 1
+        if not new:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, np.float64))
+        if len(new) == 1:
+            return new[0]
+        return (np.concatenate([x[0] for x in new]),
+                np.concatenate([x[1] for x in new]),
+                np.concatenate([x[2] for x in new]))
+
+    def graph(self, name: str = "session") -> IRGraph:
+        """The concatenated graph over every window fed so far."""
+        b = self._b
+        b._flush()
+        if b._batches:
+            src = np.concatenate([x[0] for x in b._batches])
+            dst = np.concatenate([x[1] for x in b._batches])
+            w = np.concatenate([x[2] for x in b._batches])
+        else:
+            src = np.zeros(0, np.int32)
+            dst = np.zeros(0, np.int32)
+            w = np.zeros(0, np.float64)
+        return IRGraph(n=b.n, src=src, dst=dst, w=w, name=name,
+                       node_labels=b.labels)
 
 
 # ---------------------------------------------------------------------- #

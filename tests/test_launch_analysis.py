@@ -59,7 +59,8 @@ def test_sharded_lowering_small_mesh():
         is_leaf=lambda x: isinstance(x, P))
     b_specs = batch_specs(cfg, batch, ("data",))
     step = make_train_step(cfg, opt_cfg, par)
-    with jax.set_mesh(mesh):
+    from repro.launch.mesh import mesh_context
+    with mesh_context(mesh):
         lowered = jax.jit(
             step, in_shardings=(sh(p_specs),
                                 sh({"m": p_specs, "v": p_specs,

@@ -121,6 +121,54 @@ def test_checkpoint_async_save(tmp_path):
     assert mgr.latest_step() == 5
 
 
+def test_checkpoint_crash_between_commit_and_rename(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"w": jnp.arange(4.0)}
+    mgr.save(5, state)
+    # simulate a crash after COMMIT is written but before the atomic
+    # rename: a fully-committed .tmp staging dir is left behind
+    stale = tmp_path / "step_00000010.tmp"
+    stale.mkdir()
+    (stale / "COMMIT").touch()
+    # the stale dir must not corrupt enumeration, restore, or saves
+    assert mgr.all_steps() == [5]
+    restored, meta = mgr.restore(state)
+    assert meta["step"] == 5
+    mgr.save(7, state)
+    assert mgr.all_steps() == [5, 7]
+    # a fresh manager over the same dir GCs the stale staging dir
+    mgr2 = CheckpointManager(str(tmp_path), keep=3)
+    assert not stale.exists()
+    mgr2.save(10, state)
+    assert mgr2.all_steps() == [5, 7, 10]
+
+
+def test_checkpoint_async_save_error_propagates(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    # point the manager at a plain file: the writer thread's makedirs
+    # fails, and wait() must re-raise instead of reporting success
+    mgr.dir = str(tmp_path / "blocked")
+    open(mgr.dir, "w").close()
+    mgr.save(1, {"w": jnp.ones((2,))}, blocking=False)
+    with pytest.raises(OSError):
+        mgr.wait()
+    # the error is consumed: the manager stays usable afterwards
+    mgr.dir = str(tmp_path / "ck")
+    mgr.save(2, {"w": jnp.ones((2,))}, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_restore_flat(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"a": np.arange(5), "b": np.ones((2, 2))},
+             meta={"tag": "x"})
+    flat, meta = mgr.restore_flat()
+    assert meta["step"] == 3 and meta["tag"] == "x"
+    np.testing.assert_array_equal(flat["a"], np.arange(5))
+    np.testing.assert_array_equal(flat["b"], np.ones((2, 2)))
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"w": jnp.ones((4,))})
@@ -170,6 +218,31 @@ def test_supervisor_recovers_from_failures(tmp_path):
     assert sup.restarts == 1
     # resumed from the last checkpoint, so total increments >= 10
     assert int(state["count"]) >= 10
+
+
+def test_supervisor_restarts_through_async_save_failure(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    real_write = mgr._write
+    armed = {"on": True}
+
+    def flaky_write(step, state, meta):
+        if step == 4 and armed["on"]:
+            armed["on"] = False
+            raise OSError("simulated disk failure")
+        real_write(step, state, meta)
+
+    mgr._write = flaky_write
+    sup = TrainSupervisor(mgr, save_every=2, max_restarts=5,
+                          save_blocking=False)
+    state, step = sup.run({"count": jnp.int32(0)},
+                          lambda s, i: {"count": s["count"] + 1},
+                          n_steps=8)
+    # the step-4 async write failed; the error surfaced at the next
+    # save's wait(), the supervisor restarted from step 2 and re-saved
+    assert step == 8
+    assert sup.restarts == 1
+    assert int(state["count"]) >= 8
+    assert mgr.latest_step() == 8
 
 
 # --------------------------- sharding rules --------------------------- #
