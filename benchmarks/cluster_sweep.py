@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.core import run_pipeline
 
-from .common import emit, graphs, timed
+from .common import emit, graphs, timed_phases
 
 P_SWEEP = (8, 16, 32, 64, 128, 256, 512, 1024)
 
@@ -22,10 +22,12 @@ def run(scale: str = "reduced", names=None) -> list[dict]:
         for m in ("compnet", "wb_libra"):
             times, comms = [], []
             for p in P_SWEEP:
-                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                (part, mapping, rep), us, phases = timed_phases(
+                    run_pipeline, g, p, m)
                 times.append(rep.exec_time)
                 comms.append(rep.data_comm_bytes)
                 rows.append({"graph": g.name, "method": m, "p": p,
+                             "phases": phases,
                              "exec_time": rep.exec_time,
                              "data_comm_bytes": rep.data_comm_bytes})
                 emit(f"cluster_sweep/{g.name}/{m}/p{p}", us,

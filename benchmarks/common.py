@@ -8,6 +8,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import all_benchmark_names, build_graph
 
 VERTEX_METHODS = ("pg", "libra", "w_pg", "wb_pg", "w_libra", "wb_libra")
@@ -15,6 +16,38 @@ EDGE_METHODS = ("compnet", "metis")
 ALL_METHODS = EDGE_METHODS + VERTEX_METHODS
 
 CACHE_DIR = ".cache/benchgraphs"
+
+# Span-name -> phase attribution for BENCH row "phases" dicts.  Only
+# cat=="op" spans are summed — "section" envelopes (pipeline.*) and
+# "wait" spans wrap or overlap the ops and would double-count.
+PHASE_OF = {
+    "trace.ingest": "parse",
+    "parse.shard": "parse",
+    "parse.merge": "parse",
+    "cut.stream": "cut",
+    "dist.cut": "cut",
+    "dist.merge": "merge",
+    "cut.finalize": "finalize",
+    "dist.finalize": "finalize",
+    "map.place": "map",
+    "map.cluster_graphs": "map",
+    "sim.run": "simulate",
+    "serve.fingerprint": "fingerprint",
+    "serve.cache_load": "cache",
+    "serve.cache_store": "cache",
+}
+
+
+def phases_of(events) -> dict:
+    """Fold a collector's op spans into {phase: total_us} via PHASE_OF."""
+    out: dict = {}
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("cat", "op") != "op":
+            continue
+        phase = PHASE_OF.get(ev["name"])
+        if phase is not None:
+            out[phase] = round(out.get(phase, 0.0) + ev.get("dur", 0.0), 1)
+    return out
 
 
 def graphs(scale: str = "reduced", names=None):
@@ -38,6 +71,23 @@ def timed_best(fn, *args, repeats: int = 1, **kw):
         if us < best_us:
             best_us, out = us, o
     return out, best_us
+
+
+def timed_phases(fn, *args, repeats: int = 1, **kw):
+    """Best-of-N timing with phase attribution.
+
+    Each repeat runs under a scoped collector; returns
+    ``(out, best_us, phases)`` where ``phases`` maps phase name to
+    total op-span microseconds for the *best* repeat, so the breakdown
+    is consistent with the gated number.
+    """
+    best_us, out, phases = float("inf"), None, {}
+    for _ in range(max(1, repeats)):
+        with obs.scoped() as col:
+            o, us = timed(fn, *args, **kw)
+        if us < best_us:
+            best_us, out, phases = us, o, phases_of(col.events)
+    return out, best_us, phases
 
 
 def emit(name: str, us: float, derived: str) -> None:

@@ -48,7 +48,8 @@ from repro.dist import dist_ingest, dist_vertex_cut
 from repro.obs.summarize import summarize_events
 from repro.trace import ingest_trace, synthesize_trace
 
-from .common import emit, timed_best, write_bench_json
+from .common import emit, phases_of, timed_best, timed_phases, \
+    write_bench_json
 
 CACHE_DIR = ".cache/traces"
 LINES = 276_000          # ingests to >= 510k edges (partitioner headline)
@@ -73,13 +74,14 @@ def _trace_path(lines: int) -> str:
 
 
 def _row(lines: int, backend: str, workers: int, edges: int, us: float,
-         rf: float) -> dict:
+         rf: float, phases: dict | None = None) -> dict:
     row = {"lines": lines, "backend": backend, "workers": workers,
            "edges": edges,
            "us_per_edge": round(us / max(edges, 1), 4),
            "us_total": round(us, 1),
            "edges_per_s": round(edges / (us / 1e6), 1),
-           "replication_factor": round(rf, 4)}
+           "replication_factor": round(rf, 4),
+           "phases": phases or {}}
     emit(f"dist_scaling/L{lines}/W{workers}/{backend}", us,
          f"edges_per_s={row['edges_per_s']:.0f}")
     return row
@@ -111,9 +113,10 @@ def run() -> list[dict]:
         g = ingest_trace(path)
         return g, vertex_cut(g, CUT_P, method="wb_libra", backend="fast")
 
-    (g_ref, cut_ref), us_ref = timed_best(seq_pipeline, repeats=REPEATS)
+    (g_ref, cut_ref), us_ref, ph_ref = timed_phases(seq_pipeline,
+                                                    repeats=REPEATS)
     rows.append(_row(LINES, "reference", 1, g_ref.num_edges, us_ref,
-                     cut_ref.replication_factor))
+                     cut_ref.replication_factor, ph_ref))
 
     for w in WORKERS:
         def dist_pipeline(w=w):
@@ -122,9 +125,9 @@ def run() -> list[dict]:
                                       workers=w,
                                       merge_period=MERGE_PERIOD)
 
-        (g, cut), us = timed_best(dist_pipeline, repeats=REPEATS)
+        (g, cut), us, ph = timed_phases(dist_pipeline, repeats=REPEATS)
         rows.append(_row(LINES, "dist", w, g.num_edges, us,
-                         cut.replication_factor))
+                         cut.replication_factor, ph))
         if w == 1:
             # the W=1 contract: bit-identical to the stream engine
             assert np.array_equal(cut.assignment, cut_ref.assignment), \
@@ -136,18 +139,23 @@ def run() -> list[dict]:
     big_path = _trace_path(BIG_LINES)
     by_w: dict = {}
     summaries: dict = {}
+    timeline_w4: dict = {}
     for w in BIG_WORKERS:
         def big_pipeline(w=w):
-            # trace path straight into the cut: W>1 pipelines parse→cut
+            # trace path straight into the cut: W>1 pipelines parse→cut;
+            # the W=4 run also records the engine's round timeline, which
+            # lands in meta as the Perfetto-exportable track source
+            # (python -m repro.obs timeline BENCH_dist_scaling.json)
             return dist_vertex_cut(big_path, CUT_P, method="wb_libra",
-                                   workers=w, merge_period=MERGE_PERIOD)
+                                   workers=w, merge_period=MERGE_PERIOD,
+                                   timeline=timeline_w4 if w == 4 else None)
 
         # scoped collector: the engine's telemetry spans become the
         # per-round timeline (merged upward into REPRO_PROFILE if set)
         with obs.scoped() as prof:
             cut, us = timed_best(big_pipeline, repeats=BIG_REPEATS)
         rows.append(_row(BIG_LINES, "dist", w, len(cut.assignment), us,
-                         cut.replication_factor))
+                         cut.replication_factor, phases_of(prof.events)))
         by_w[w] = rows[-1]
         if w > 1:
             assert any(ev["name"] == "dist.parse_wait"
@@ -185,7 +193,8 @@ def run() -> list[dict]:
                            "rf_ratio_w4": round(rf_ratio_w4, 4),
                            "serial_fraction_w4": serial_fraction_w4,
                            "phases_w4": summaries.get(4),
-                           "phases_w8": summaries.get(8)})
+                           "phases_w8": summaries.get(8),
+                           "timeline_w4": timeline_w4 or None})
     return rows
 
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from repro.core import vertex_cut
 
-from .common import VERTEX_METHODS, emit, graphs, timed
+from .common import VERTEX_METHODS, emit, graphs, timed_phases
 
 
 def run(scale: str = "reduced", p: int = 8, names=None) -> list[dict]:
@@ -21,8 +21,10 @@ def run(scale: str = "reduced", p: int = 8, names=None) -> list[dict]:
     for g in graphs(scale, names):
         by_method = {}
         for m in VERTEX_METHODS:
-            r, us = timed(vertex_cut, g, p, method=m, lam=1.0)
+            r, us, phases = timed_phases(vertex_cut, g, p, method=m,
+                                         lam=1.0)
             by_method[m] = {"graph": g.name, "method": m,
+                            "phases": phases,
                             "imbalance": r.edge_weight_imbalance}
             rows.append(by_method[m])
             emit(f"edge_imbalance/{g.name}/{m}", us,

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.core import run_pipeline
 
-from .common import ALL_METHODS, emit, graphs, timed
+from .common import ALL_METHODS, emit, graphs, timed_phases
 
 P_VALUES = (8, 64, 1024)
 
@@ -17,11 +17,13 @@ def run(scale: str = "reduced", names=None,
         for p in p_values:
             base = None
             for m in ALL_METHODS:
-                (part, mapping, rep), us = timed(run_pipeline, g, p, m)
+                (part, mapping, rep), us, phases = timed_phases(
+                    run_pipeline, g, p, m)
                 if m == "compnet":
                     base = rep
                 speed = base.exec_time / rep.exec_time
                 rows.append({"graph": g.name, "p": p, "method": m,
+                             "phases": phases,
                              "exec_time": rep.exec_time,
                              "speedup_vs_compnet": speed})
                 emit(f"execution_time/{g.name}/p{p}/{m}", us,

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.core import run_pipeline
 
-from .common import emit, graphs, timed
+from .common import emit, graphs, timed_phases
 
 LAMBDAS = (1.0, 1.0004, 1.0008, 1.0012, 1.01, 1.1, 2.0)
 
@@ -20,13 +20,15 @@ def run(scale: str = "reduced", names=None, p: int = 8) -> list[dict]:
     for g in graphs(scale, names):
         for fam in ("libra", "pg"):
             # unbounded asymptote
-            (_, _, w_rep), _ = timed(run_pipeline, g, p, f"w_{fam}")
+            (_, _, w_rep), _us, _ph = timed_phases(run_pipeline, g, p,
+                                                   f"w_{fam}")
             times = []
             for lam in LAMBDAS:
-                (part, mapping, rep), us = timed(
+                (part, mapping, rep), us, phases = timed_phases(
                     run_pipeline, g, p, f"wb_{fam}", lam=lam)
                 times.append(rep.exec_time)
                 rows.append({"graph": g.name, "family": fam, "lam": lam,
+                             "phases": phases,
                              "exec_time": rep.exec_time,
                              "w_variant_time": w_rep.exec_time})
                 emit(f"lambda_sensitivity/{g.name}/wb_{fam}/lam{lam}", us,

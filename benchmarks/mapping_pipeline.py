@@ -29,8 +29,10 @@ from repro.core import (Machine, cluster_interaction_graphs,
                         synthesize_powerlaw_graph, vertex_bytes_model,
                         vertex_cut)
 from repro.core.pallas import require_pallas
+from repro.core.pallas.cost import interaction_cost, keyed_sum_cost
 
-from .common import emit, timed_best, write_bench_json
+from .common import emit, timed_phases, write_bench_json
+from .roofline import roofline_fraction
 
 N = 100_000              # >=170k edges at alpha=2.2
 PS = (8, 64, 256, 1024)
@@ -41,6 +43,11 @@ REPEATS = 5
 # shape — the reference-probe calibration cannot track compile-cache
 # state, so compiles must never score) and then best-of-3
 BACKEND_REPEATS = {"fast": REPEATS, "reference": 2, "pallas": 3}
+
+
+def _merge_costs(*costs: dict) -> dict:
+    return {"flops": sum(c["flops"] for c in costs),
+            "hbm_bytes": sum(c["hbm_bytes"] for c in costs)}
 
 
 def _map_and_score(g, cut, vb, machine, backend):
@@ -67,15 +74,30 @@ def run() -> list[dict]:
         for backend in backends:
             if backend == "pallas":
                 _map_and_score(g, cut, vb, machine, backend)  # warm compiles
-            rep, us = timed_best(_map_and_score, g, cut, vb, machine,
-                                 backend,
-                                 repeats=BACKEND_REPEATS[backend])
+            rep, us, phases = timed_phases(_map_and_score, g, cut, vb,
+                                           machine, backend,
+                                           repeats=BACKEND_REPEATS[backend])
             per_cluster = us / p
             row = {"n": N, "edges": g.num_edges, "p": p, "backend": backend,
                    "us_per_cluster": round(per_cluster, 3),
                    "us_total": round(us, 1),
                    "exec_time": rep.exec_time,
-                   "data_comm_bytes": rep.data_comm_bytes}
+                   "data_comm_bytes": rep.data_comm_bytes,
+                   "phases": phases}
+            if backend == "pallas":
+                # device work: interaction reductions + the simulator's
+                # three keyed sums (per-cluster compute, per-core fold,
+                # replica-sync wait — the triple stream is ~|members|)
+                members = len(cut.replica_csr()[1])
+                cost = _merge_costs(
+                    interaction_cost(members, p),
+                    keyed_sum_cost(g.num_edges, p),
+                    keyed_sum_cost(p, machine.n_cores),
+                    keyed_sum_cost(members, machine.n_cores))
+                row["hlo_flops"] = cost["flops"]
+                row["hlo_hbm_bytes"] = cost["hbm_bytes"]
+                row["roofline_fraction"] = round(roofline_fraction(
+                    cost["flops"], cost["hbm_bytes"], us), 6)
             rows.append(row)
             by_key[(p, backend)] = row
             emit(f"mapping_pipeline/p{p}/{backend}", us,

@@ -13,8 +13,10 @@ from __future__ import annotations
 
 from repro.core import resolve_backend, synthesize_powerlaw_graph, vertex_cut
 from repro.core.pallas import require_pallas
+from repro.core.pallas.cost import partitioner_finalize_cost
 
-from .common import emit, timed_best, write_bench_json
+from .common import emit, timed_phases, write_bench_json
+from .roofline import roofline_fraction
 
 # (n, p sweep, backends); the reference oracle only runs at <=32k vertices
 SMALL_NS = (2_000, 8_000, 32_000)
@@ -30,12 +32,22 @@ BACKEND_REPEATS = {"fast": REPEATS, "reference": 2, "pallas": 3}
 def _row(g, n, p, backend, repeats=REPEATS):
     if backend == "pallas":
         vertex_cut(g, p, method="wb_libra", backend=backend)  # warm compiles
-    r, us = timed_best(vertex_cut, g, p, method="wb_libra",
-                       backend=backend, repeats=repeats)
+    r, us, phases = timed_phases(vertex_cut, g, p, method="wb_libra",
+                                 backend=backend, repeats=repeats)
     per_edge = us / max(g.num_edges, 1)
     row = {"n": n, "edges": g.num_edges, "p": p, "backend": backend,
            "us_per_edge": round(per_edge, 4), "us_total": round(us, 1),
-           "replication_factor": round(r.replication_factor, 4)}
+           "replication_factor": round(r.replication_factor, 4),
+           "phases": phases}
+    if backend == "pallas":
+        # lowered-HLO cost of the on-accelerator finalize, judged against
+        # the roofline over its measured (finalize-phase) time
+        cost = partitioner_finalize_cost(n, g.num_edges, p)
+        row["hlo_flops"] = cost["flops"]
+        row["hlo_hbm_bytes"] = cost["hbm_bytes"]
+        row["roofline_fraction"] = round(roofline_fraction(
+            cost["flops"], cost["hbm_bytes"],
+            phases.get("finalize") or us), 6)
     emit(f"partitioner_scaling/E{g.num_edges}/p{p}/{backend}", us,
          f"us_per_edge={per_edge:.3f}")
     return row

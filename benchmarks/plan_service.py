@@ -17,11 +17,23 @@ Serving-regime throughput of `repro.serve` on the 276k-line trace
     (state warm, durable CSR built); timed portion appends the last 10%
     window and re-plans.  Only dirty replica-CSR rows are re-decoded.
 
+  * ``zipf_mix`` — the production request mix: many requests over few
+    distinct programs, source popularity Zipf-skewed, served by an
+    LRU-*bounded* service (`max_hot_entries` < distinct sources) so the
+    hot map churns: head sources stay resident, tail sources evict and
+    reload from disk.  The row reports sustained ``plans_per_s``, the
+    deterministic ``hit_rate``, and the live latency ``p50_us``/
+    ``p99_us`` straight from `PlanService.metrics()`.
+
 Gates (`benchmarks/baselines/plan_service.json` + CI):
   * meta.speedup_cache_hit = cold / cache_hit >= 50x (a hit must cost
     dictionary-lookup time, not pipeline time);
   * meta.speedup_incremental = incremental_cold / incremental_warm >=
     3x (re-planning a 10% window must not pay the full-recut price);
+  * meta.zipf_hit_rate >= 0.9 (checked in CI via
+    ``--min-speedup 0.9 --speedup-key zipf_hit_rate``: the hit rate of
+    the fixed request sequence is deterministic, so a drop means the
+    cache or fingerprint layer broke);
   * replication_factor per row at quality factor 1.01 — every stage is
     deterministic, so any drift means the algorithm changed.
 
@@ -29,6 +41,9 @@ Bit-identity is asserted outright, not gated: the cache-hit and
 warm-restart bundles must equal the cold bundle array-for-array, and
 the warm incremental plan must equal the cold incremental plan over the
 concatenated trace (the `repro.serve` window-invariance contract).
+So are the live-metrics invariants: `PlanService.metrics()` must agree
+with the request history (tier counts, hit rate, evictions), and the
+memory-tier p99 must sit far below the cold-tier p50.
 """
 from __future__ import annotations
 
@@ -40,7 +55,7 @@ import numpy as np
 
 from repro.serve import IncrementalPlanner, PlanRequest, PlanService
 
-from .common import emit, timed_best, write_bench_json
+from .common import emit, timed_phases, write_bench_json
 
 CACHE_DIR = ".cache/traces"
 PLAN_CACHE = ".cache/plans_bench"
@@ -49,6 +64,15 @@ CUT_P = 64
 LAM = 1.1
 WARM_FRACTION = 0.9      # pre-fed share for the incremental_warm stage
 HIT_REPEATS = 5          # hits are cheap and idempotent: best-of-5
+
+# ----- the zipf_mix serving scenario ----- #
+ZIPF_CACHE = ".cache/plans_bench_zipf"
+ZIPF_LINES = 2_000       # small programs: the mix is about cache traffic
+ZIPF_SOURCES = 8         # distinct programs in the request universe
+ZIPF_REQUESTS = 1_000
+ZIPF_EXPONENT = 1.2      # popularity ~ 1/rank^1.2
+ZIPF_HOT_ENTRIES = 4     # < ZIPF_SOURCES: the LRU bound must churn
+ZIPF_P = 16
 
 
 def _trace_path(lines: int) -> str:
@@ -61,12 +85,76 @@ def _trace_path(lines: int) -> str:
 
 
 def _row(stage: str, backend: str, edges: int, us: float,
-         rf: float) -> dict:
+         rf: float, phases: "dict | None" = None) -> dict:
     row = {"lines": LINES, "stage": stage, "backend": backend,
            "edges": edges, "us_total": round(us, 1),
-           "replication_factor": round(rf, 4)}
+           "replication_factor": round(rf, 4),
+           "phases": phases or {}}
     emit(f"plan_service/{stage}", us, f"rf={rf:.4f}")
     return row
+
+
+def _zipf_mix() -> "tuple[dict, dict]":
+    """Serve the skewed request mix through an LRU-bounded service;
+    returns (bench row, live metrics snapshot)."""
+    from repro.trace import synthesize_trace
+    paths = []
+    for i in range(ZIPF_SOURCES):
+        p = os.path.join(CACHE_DIR,
+                         f"synth_{ZIPF_LINES}_seed{100 + i}.ndjson")
+        if not os.path.exists(p):
+            synthesize_trace(p, ZIPF_LINES, seed=100 + i)
+        paths.append(p)
+    pop = 1.0 / np.arange(1, ZIPF_SOURCES + 1) ** ZIPF_EXPONENT
+    picks = np.random.default_rng(0).choice(
+        ZIPF_SOURCES, size=ZIPF_REQUESTS, p=pop / pop.sum())
+    reqs = [PlanRequest(source=paths[i], p=ZIPF_P, method="wb_libra",
+                        lam=LAM) for i in picks]
+
+    shutil.rmtree(ZIPF_CACHE, ignore_errors=True)   # cold universe
+    svc = PlanService(cache_dir=ZIPF_CACHE,
+                      max_hot_entries=ZIPF_HOT_ENTRIES)
+
+    def serve():
+        for req in reqs:
+            svc.plan(req)
+
+    _, us, phases = timed_phases(serve)
+    m = svc.metrics()
+
+    # the request sequence is fixed, so the traffic split is too: first
+    # sight of each source is the only miss — an evicted bundle comes
+    # back from disk as a (slower) *hit*, never as a re-plan
+    expect_hits = ZIPF_REQUESTS - ZIPF_SOURCES
+    assert m["plans"] == ZIPF_REQUESTS and m["hits"] == expect_hits, \
+        (m["plans"], m["hits"])
+    assert m["hit_rate"] == round(expect_hits / ZIPF_REQUESTS, 4), \
+        m["hit_rate"]
+    assert m["tiers"]["cold"]["count"] == ZIPF_SOURCES, m["tiers"]
+    assert m["evictions"] > 0, \
+        "LRU bound below the source count produced no evictions"
+    assert m["hot_entries"] <= ZIPF_HOT_ENTRIES, m["hot_entries"]
+    assert m["tiers"]["disk"]["count"] > 0, \
+        "evicted bundles never reloaded from disk"
+    # hits must stay in dictionary-lookup territory: the memory-tier
+    # p99 far below the cold-tier median
+    assert m["tiers"]["memory"]["p99_us"] * 5 \
+        < m["tiers"]["cold"]["p50_us"], m["tiers"]
+    assert m["plan_latency_p99_us"] > 0 and m["plans_per_s"] > 0, m
+
+    row = {"lines": ZIPF_LINES, "stage": "zipf_mix", "backend": "serve",
+           "requests": ZIPF_REQUESTS, "distinct": ZIPF_SOURCES,
+           "hot_entries": ZIPF_HOT_ENTRIES,
+           "us_total": round(us, 1),
+           "hit_rate": m["hit_rate"],
+           "plans_per_s": m["plans_per_s"],
+           "p50_us": m["plan_latency_p50_us"],
+           "p99_us": m["plan_latency_p99_us"],
+           "phases": phases}
+    emit("plan_service/zipf_mix", us,
+         f"plans_per_s={m['plans_per_s']:.0f} hit_rate={m['hit_rate']} "
+         f"evictions={m['evictions']} p99_us={m['plan_latency_p99_us']}")
+    return row, m
 
 
 def _assert_same_bundle(a, b, what: str) -> None:
@@ -85,26 +173,34 @@ def run() -> list[dict]:
     req = PlanRequest(source=path, p=CUT_P, method="wb_libra", lam=LAM)
 
     svc = PlanService(cache_dir=PLAN_CACHE)
-    cold, us_cold = timed_best(lambda: svc.plan(req), repeats=1)
+    cold, us_cold, ph_cold = timed_phases(lambda: svc.plan(req))
     assert cold.cache == "cold"
     m = int(cold.bundle.edge_counts.sum())
     rows.append(_row("cold", "reference", m, us_cold,
-                     cold.bundle.replication_factor))
+                     cold.bundle.replication_factor, ph_cold))
 
-    hit, us_hit = timed_best(lambda: svc.plan(req), repeats=HIT_REPEATS)
+    hit, us_hit, ph_hit = timed_phases(lambda: svc.plan(req),
+                                       repeats=HIT_REPEATS)
     assert hit.cache == "memory"
     _assert_same_bundle(hit.bundle, cold.bundle, "cache_hit")
     rows.append(_row("cache_hit", "serve", m, us_hit,
-                     hit.bundle.replication_factor))
+                     hit.bundle.replication_factor, ph_hit))
+
+    # the always-on registry must agree with the request history
+    live = svc.metrics()
+    assert live["misses"] == 1 and live["hits"] == HIT_REPEATS, live
+    assert live["tiers"]["cold"]["count"] == 1, live["tiers"]
+    assert live["tiers"]["memory"]["count"] == HIT_REPEATS, live["tiers"]
+    assert live["plan_latency_p99_us"] > 0, live
 
     def restart():
         return PlanService(cache_dir=PLAN_CACHE).plan(req)
 
-    warm, us_warm = timed_best(restart, repeats=HIT_REPEATS)
+    warm, us_warm, ph_warm = timed_phases(restart, repeats=HIT_REPEATS)
     assert warm.cache == "disk"
     _assert_same_bundle(warm.bundle, cold.bundle, "warm_restart")
     rows.append(_row("warm_restart", "serve", m, us_warm,
-                     warm.bundle.replication_factor))
+                     warm.bundle.replication_factor, ph_warm))
 
     # ----- incremental repartitioning: 10% appended window ----- #
     def inc_cold():
@@ -112,9 +208,9 @@ def run() -> list[dict]:
         pl.append(path)
         return pl.plan()
 
-    (_, cut_c, _, rep_c), us_inc_cold = timed_best(inc_cold, repeats=1)
+    (_, cut_c, _, rep_c), us_inc_cold, ph_inc_c = timed_phases(inc_cold)
     rows.append(_row("incremental_cold", "serve", m, us_inc_cold,
-                     cut_c.replication_factor))
+                     cut_c.replication_factor, ph_inc_c))
 
     with open(path) as f:
         lines = f.read().splitlines(keepends=True)
@@ -127,9 +223,9 @@ def run() -> list[dict]:
         pl.append(io.StringIO("".join(lines[split:])))
         return pl.plan()
 
-    (_, cut_w, _, rep_w), us_inc_warm = timed_best(inc_warm, repeats=1)
+    (_, cut_w, _, rep_w), us_inc_warm, ph_inc_w = timed_phases(inc_warm)
     rows.append(_row("incremental_warm", "serve", m, us_inc_warm,
-                     cut_w.replication_factor))
+                     cut_w.replication_factor, ph_inc_w))
     # the window-invariance contract: warm == cold recut, bit for bit
     for field in ("assignment", "loads", "edge_counts", "replica_indptr",
                   "replica_flat"):
@@ -138,6 +234,10 @@ def run() -> list[dict]:
             f"incremental_warm: {field} diverged from the cold recut"
     assert rep_w.exec_time == rep_c.exec_time, \
         "incremental_warm: simulated cost diverged from the cold recut"
+
+    # ----- the skewed serving mix over an LRU-bounded service ----- #
+    zipf_row, zipf_metrics = _zipf_mix()
+    rows.append(zipf_row)
 
     speedup_hit = us_cold / max(us_hit, 1e-9)
     speedup_restart = us_cold / max(us_warm, 1e-9)
@@ -152,7 +252,14 @@ def run() -> list[dict]:
                            "edges": m,
                            "speedup_cache_hit": round(speedup_hit, 1),
                            "speedup_warm_restart": round(speedup_restart, 1),
-                           "speedup_incremental": round(speedup_inc, 2)})
+                           "speedup_incremental": round(speedup_inc, 2),
+                           "hit_p50_us": live["tiers"]["memory"]["p50_us"],
+                           "hit_p99_us": live["tiers"]["memory"]["p99_us"],
+                           "zipf_hit_rate": zipf_metrics["hit_rate"],
+                           "zipf_plans_per_s": zipf_metrics["plans_per_s"],
+                           "zipf_evictions": zipf_metrics["evictions"],
+                           "zipf_p99_us":
+                               zipf_metrics["plan_latency_p99_us"]})
     return rows
 
 

@@ -1,16 +1,19 @@
-"""Roofline analysis per (arch × shape × mesh) from the dry-run artifacts.
+"""Roofline analysis: judge measured kernel rows against an analytic bound.
 
-Terms (per chip, per step; TPU v5e constants):
-  compute    = HLO_FLOPs / peak_FLOPs           (197 TFLOP/s bf16)
-  memory     = HLO_bytes / HBM_bw               (819 GB/s)
-  collective = collective_bytes / link_bw       (~50 GB/s/link ICI;
-               the 'pod' axis share rides DCN at ~25 GB/s/host)
+Two input modes, auto-detected from the JSON shape:
 
-HLO_FLOPs/bytes come from the loop-aware analyzer (repro.analysis) over
-the SPMD-partitioned module — i.e. already per-device; collective bytes
-likewise.  MODEL_FLOPS = 6·N·D (training, dense) or 6·N_active·D (MoE);
-2·N·D for single-token decode; the ratio MODEL_FLOPS/HLO_FLOPs measures
-how much compiled compute is useful (remat/dispatch waste shows up here).
+* **Bench mode** (default) — a ``BENCH_*.json`` suite document whose
+  pallas rows carry ``hlo_flops`` / ``hlo_hbm_bytes`` (lowered-HLO costs
+  from `repro.core.pallas.cost`).  Each row is scored against the CPU
+  roofline: ``ideal_us = max(flops/peak, bytes/bw)`` and
+  ``roofline_fraction = ideal_us / measured_us``.  With no explicit
+  path, every default bench JSON that exists is scanned.
+* **Dry-run mode** (legacy) — a ``dryrun_results.json`` list of compiled
+  (arch × shape × mesh) records, scored against TPU v5e constants.
+
+CPU constants are deliberately conservative single-core numbers (the
+timed kernels run interpret-mode Pallas on one core) and overridable:
+``REPRO_ROOFLINE_PEAK_FLOPS`` / ``REPRO_ROOFLINE_MEM_BW``.
 """
 from __future__ import annotations
 
@@ -19,10 +22,53 @@ import os
 
 from repro.configs import ARCHS, SHAPES
 
-PEAK_FLOPS = 197e12          # bf16 / chip
+from .common import bench_output_path
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e, dry-run mode)
 HBM_BW = 819e9               # B/s
 ICI_BW = 50e9                # B/s per link
 DCN_BW = 25e9                # B/s per host (pod axis)
+
+# CPU roofline for the bench rows: single-core scalar-ish throughput
+# (the interpret-mode kernels don't vectorize) and one core's share of
+# memory bandwidth.  Environment-overridable for calibrated hosts.
+CPU_PEAK_FLOPS = float(os.environ.get("REPRO_ROOFLINE_PEAK_FLOPS", 5e10))
+CPU_MEM_BW = float(os.environ.get("REPRO_ROOFLINE_MEM_BW", 2e10))
+
+# suites whose pallas rows carry lowered-HLO cost fields
+BENCH_SUITES = ("partitioner_scaling", "mapping_pipeline")
+
+
+def ideal_us(flops: float, hbm_bytes: float) -> float:
+    """Roofline-ideal time for a kernel on the CPU model: bound by
+    whichever of compute and memory traffic dominates."""
+    return max(flops / CPU_PEAK_FLOPS, hbm_bytes / CPU_MEM_BW) * 1e6
+
+
+def roofline_fraction(flops: float, hbm_bytes: float,
+                      measured_us: float) -> float:
+    """ideal/measured in (0, 1]-ish — how close the measured kernel ran
+    to its analytic bound (interpret mode sits far below 1)."""
+    return ideal_us(flops, hbm_bytes) / max(measured_us, 1e-9)
+
+
+def analyze_bench_rows(doc: dict) -> list[dict]:
+    """Score a bench suite document's HLO-costed rows."""
+    out = []
+    for row in doc.get("rows", []):
+        flops = row.get("hlo_flops")
+        hbm = row.get("hlo_hbm_bytes")
+        if flops is None or hbm is None:
+            continue
+        us = row.get("us_total", 0.0)
+        frac = row.get("roofline_fraction",
+                       roofline_fraction(flops, hbm, us))
+        tag = "/".join(str(row[k]) for k in ("backend", "p") if k in row)
+        out.append({"suite": doc.get("suite", "?"), "row": tag,
+                    "hlo_flops": flops, "hlo_hbm_bytes": hbm,
+                    "us_total": us, "ideal_us": ideal_us(flops, hbm),
+                    "roofline_fraction": frac})
+    return out
 
 
 def _attention_flops(cfg, sc) -> float:
@@ -103,7 +149,7 @@ def analyze_record(rec: dict) -> dict | None:
     }
 
 
-def load_results(path: str = "dryrun_results.json") -> list[dict]:
+def load_results(path: str) -> list[dict]:
     if not os.path.exists(path):
         return []
     with open(path) as f:
@@ -116,7 +162,7 @@ def load_results(path: str = "dryrun_results.json") -> list[dict]:
     return [analyze_record(r) for r in latest.values()]
 
 
-def run(path: str = "dryrun_results.json") -> list[dict]:
+def _run_dryrun(path: str) -> list[dict]:
     rows = [r for r in load_results(path) if r]
     rows.sort(key=lambda r: (r["mesh"], r["cell"]))
     for r in rows:
@@ -128,6 +174,46 @@ def run(path: str = "dryrun_results.json") -> list[dict]:
               f"useful_ratio={r['useful_ratio']:.3f};"
               f"roofline_fraction={r['roofline_fraction']:.3f}")
     return rows
+
+
+def _run_bench(docs: list[dict]) -> list[dict]:
+    rows = []
+    for doc in docs:
+        rows.extend(analyze_bench_rows(doc))
+    rows.sort(key=lambda r: (r["suite"], r["row"]))
+    for r in rows:
+        print(f"roofline/{r['suite']}/{r['row']},{r['us_total']:.1f},"
+              f"ideal_us={r['ideal_us']:.1f};"
+              f"flops={r['hlo_flops']:.3e};"
+              f"hbm_bytes={r['hlo_hbm_bytes']:.3e};"
+              f"roofline_fraction={r['roofline_fraction']:.4f}")
+    return rows
+
+
+def run(path: str | None = None) -> list[dict]:
+    """Score roofline rows from ``path``, auto-detecting the format; with
+    no path, scan the default bench outputs (and fall back to a legacy
+    ``dryrun_results.json`` if that is all that exists)."""
+    if path is not None:
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc, dict) and "suite" in doc:
+            return _run_bench([doc])
+        return _run_dryrun(path)
+
+    docs = []
+    for suite in BENCH_SUITES:
+        p = bench_output_path(suite)
+        if os.path.exists(p):
+            with open(p) as f:
+                docs.append(json.load(f))
+    if docs:
+        return _run_bench(docs)
+    if os.path.exists("dryrun_results.json"):
+        return _run_dryrun("dryrun_results.json")
+    print("roofline: no bench JSON found (run partitioner_scaling / "
+          "mapping_pipeline first)")
+    return []
 
 
 if __name__ == "__main__":

@@ -55,7 +55,7 @@ SUITES = {
     "cluster_sweep": lambda a: cluster_sweep.run(
         scale=a.scale, names=a.names),            # paper Figs 9-10 sweep
     "expert_placement": lambda a: expert_placement.run(),  # beyond-paper EP
-    "roofline": lambda a: roofline.run(a.dryrun),  # EXPERIMENTS §Roofline
+    "roofline": lambda a: roofline.run(a.roofline_json),  # bench HLO costs
 }
 
 
@@ -67,7 +67,10 @@ def main() -> None:
                     help="comma list of suites to run")
     ap.add_argument("--graphs", default=None,
                     help="comma list of benchmark graphs")
-    ap.add_argument("--dryrun", default="dryrun_results.json")
+    ap.add_argument("--roofline-json", default=None, dest="roofline_json",
+                    help="roofline input: a BENCH_*.json (bench mode) or "
+                         "a dryrun_results.json (legacy TPU mode); "
+                         "default scans the bench outputs")
     args = ap.parse_args()
     args.scale = "paper" if args.paper else "reduced"
     args.names = args.graphs.split(",") if args.graphs else None

@@ -43,13 +43,14 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.core import vertex_cut
 from repro.core.graph import IRGraph
 from repro.trace import (SCANNER_ENV, ingest_trace_with_stats, read_trace_bin,
                          resolve_weight_model, synthesize_trace, type_bytes,
                          write_trace_bin)
 
-from .common import emit, timed, timed_best, write_bench_json
+from .common import emit, timed, timed_phases, write_bench_json
 
 CACHE_DIR = ".cache/traces"
 SMALL_LINES = 100_000
@@ -135,41 +136,50 @@ def _bin_path(lines: int, model: str) -> str:
     return path
 
 
+def _reference_spanned(path: str, model: str) -> IRGraph:
+    # the naive oracle has no internal telemetry; the bench wraps it so
+    # its rows still carry a parse-phase breakdown
+    with obs.span("trace.ingest", engine="reference"):
+        return reference_ingest(path, model)
+
+
 def _row(lines: int, model: str, backend: str, with_quality: bool):
     path = _trace_path(lines)
     if backend == "fast":
         with _scanner("0"):
-            (g, stats), us = timed(ingest_trace_with_stats, path,
-                                   weight_model=model,
-                                   chunk_edges=CHUNK_EDGES)
+            (g, stats), us, phases = timed_phases(
+                ingest_trace_with_stats, path, weight_model=model,
+                chunk_edges=CHUNK_EDGES)
         assert stats.engine == "stream", stats.engine
         # streaming discipline: buffer bounded by chunk, not trace size
         assert stats.peak_chunk_edges <= CHUNK_EDGES + 8, \
             f"edge buffer {stats.peak_chunk_edges} exceeds chunk bound"
     elif backend == "scan":
         with _scanner("1"):
-            (g, stats), us = timed(ingest_trace_with_stats, path,
-                                   weight_model=model,
-                                   chunk_edges=CHUNK_EDGES)
+            (g, stats), us, phases = timed_phases(
+                ingest_trace_with_stats, path, weight_model=model,
+                chunk_edges=CHUNK_EDGES)
         assert stats.engine == "scan", \
             f"scanner fell back to {stats.engine!r} on {path}"
     elif backend == "auto":
         with _scanner("auto"):
-            (g, stats), us = timed(ingest_trace_with_stats, path,
-                                   weight_model=model,
-                                   chunk_edges=CHUNK_EDGES)
+            (g, stats), us, phases = timed_phases(
+                ingest_trace_with_stats, path, weight_model=model,
+                chunk_edges=CHUNK_EDGES)
         engine_used = stats.engine
     elif backend == "binary":
         bpath = _bin_path(lines, model)
-        (g, stats), us = timed_best(read_trace_bin, bpath, repeats=3)
+        (g, stats), us, phases = timed_phases(read_trace_bin, bpath,
+                                              repeats=3)
         assert stats.engine == "binary", stats.engine
     else:
-        g, us = timed(reference_ingest, path, model)
+        g, us, phases = timed_phases(_reference_spanned, path, model)
     row = {"lines": lines, "model": model, "backend": backend,
            "edges": g.num_edges,
            "us_per_edge": round(us / max(g.num_edges, 1), 4),
            "us_total": round(us, 1),
-           "edges_per_s": round(g.num_edges / (us / 1e6), 1)}
+           "edges_per_s": round(g.num_edges / (us / 1e6), 1),
+           "phases": phases}
     if backend == "auto":
         row["engine"] = engine_used
     if with_quality:

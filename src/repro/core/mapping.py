@@ -202,18 +202,19 @@ def cluster_interaction_graphs(replicas, p: int,
     the vectorized fast path directly) or the legacy list-of-sets view.
     """
     backend = resolve_mapping_backend(backend)
-    if backend == "pallas":
-        from .pallas import metrics as _pallas_metrics
-        indptr, members = _as_replica_csr(replicas)
-        comm, shared = _pallas_metrics.interaction_from_csr(
-            indptr, members, p, vertex_bytes, pairwise_cap)
-        return np.asarray(comm), np.asarray(shared)
-    if backend == "fast":
-        indptr, members = _as_replica_csr(replicas)
-        return interaction_from_csr(indptr, members, p, vertex_bytes,
-                                    pairwise_cap)
-    return _interaction_reference(_as_replica_list(replicas), p,
-                                  vertex_bytes, pairwise_cap)
+    with obs.span("map.cluster_graphs", engine=backend, p=p):
+        if backend == "pallas":
+            from .pallas import metrics as _pallas_metrics
+            indptr, members = _as_replica_csr(replicas)
+            comm, shared = _pallas_metrics.interaction_from_csr(
+                indptr, members, p, vertex_bytes, pairwise_cap)
+            return np.asarray(comm), np.asarray(shared)
+        if backend == "fast":
+            indptr, members = _as_replica_csr(replicas)
+            return interaction_from_csr(indptr, members, p, vertex_bytes,
+                                        pairwise_cap)
+        return _interaction_reference(_as_replica_list(replicas), p,
+                                      vertex_bytes, pairwise_cap)
 
 
 def _interaction_reference(replicas: list, p: int,

@@ -388,8 +388,9 @@ def vertex_cut(g: IRGraph, p: int, method: str = "wb_libra",
     bound = lam * total_load / p if balanced else float("inf")
 
     if backend == "reference":
-        assignment = _stream_reference(g.n, p, src, dst, w, deg, bound,
-                                       libra_rule, perm)
+        with obs.span("cut.stream", engine="reference", edges=len(src)):
+            assignment = _stream_reference(g.n, p, src, dst, w, deg,
+                                           bound, libra_rule, perm)
     else:
         # the pallas backend streams on the fast engine: the greedy
         # stream is inherently sequential, only the reductions move

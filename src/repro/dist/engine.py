@@ -537,6 +537,7 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                 obs.complete("dist.parse_wait", t0,
                              t0 + parse_wait_us / 1e6, lane="coord",
                              cat="wait", round=len(outs))
+                obs.observe("dist.parse_wait_us", parse_wait_us)
                 if backlog.size == 0:
                     break
                 src_r, dst_r, w_r = backlog.pop(round_edges)
@@ -574,10 +575,16 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                                      out_r[a:b]))
                 cut_us = pool.run_round(jobs)
                 r = len(outs)
+                # worker durations arrive over the pool's result channel
+                # (a pipe for process pools), so the coordinator merges
+                # every worker's samples into one histogram here — no
+                # shared memory, identical distribution to a serial run
                 for (s, _su, _sv, _w, _out), (ct0, cus) in zip(jobs, cut_us):
                     obs.complete("dist.cut", ct0, ct0 + cus / 1e6,
                                  lane=f"cut/w{s}", round=r)
+                    obs.observe("dist.cut_us", cus)
                 obs.counter("dist.edges", k)
+                obs.observe("dist.round_edges", k)
                 outs.append(out_r)
                 t1 = perf_counter()
                 more = backlog.size > 0 or not exhausted
@@ -586,6 +593,7 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                 if more:
                     obs.complete("dist.merge", t1, t1 + merge_us / 1e6,
                                  lane="coord", round=r, full=bool(full))
+                    obs.observe("dist.merge_us", merge_us)
                 if rounds_tl is not None:
                     rounds_tl.append({
                         "round": r, "edges": k,
@@ -608,6 +616,7 @@ def _pipelined_cut(path: str, p: int, method: str, lam: float,
                                       executor=ex)
     finalize_us = (perf_counter() - t2) * 1e6
     obs.complete("dist.finalize", t2, t2 + finalize_us / 1e6, lane="coord")
+    obs.observe("dist.finalize_us", finalize_us)
     obs.counter("dist.full_merges", ctrl.full_merges)
     obs.counter("dist.round_merges", ctrl.round_merges)
     if timeline is not None:
@@ -811,12 +820,14 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
                 for (s, _su, _sv, _w, _o), (ct0, cus) in zip(jobs, cut_us):
                     obs.complete("dist.cut", ct0, ct0 + cus / 1e6,
                                  lane=f"cut/w{s}", round=r)
+                    obs.observe("dist.cut_us", cus)
                 t1 = perf_counter()
                 full = ctrl.round_merge(wpool) if r + 1 < rounds else False
                 merge_us = (perf_counter() - t1) * 1e6
                 if r + 1 < rounds:
                     obs.complete("dist.merge", t1, t1 + merge_us / 1e6,
                                  lane="coord", round=r, full=bool(full))
+                    obs.observe("dist.merge_us", merge_us)
                 if rounds_tl is not None:
                     rounds_tl.append({
                         "round": r,
@@ -834,7 +845,9 @@ def dist_vertex_cut(g, p: int, method: str = "wb_libra", lam: float = 1.0,
     with ThreadPoolExecutor(max_workers=_FINALIZE_SHARDS) as ex:
         result = _finalize_from_masks(g, method, p, lam, assignment, masks,
                                       executor=ex)
-    obs.complete("dist.finalize", t2, perf_counter(), lane="coord")
+    t3 = perf_counter()
+    obs.complete("dist.finalize", t2, t3, lane="coord")
+    obs.observe("dist.finalize_us", (t3 - t2) * 1e6)
     if timeline is not None:
         timeline.update({
             "mode": "two-phase", "pool": wpool.kind, "engine": engine,

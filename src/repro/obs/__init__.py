@@ -27,13 +27,18 @@ from .core import (
     enabled,
     event,
     gauge,
+    observe,
     profiled,
     scoped,
     span,
 )
+from .metrics import DEFAULT_BUCKETS_US, Histogram, MetricsRegistry
 
 __all__ = [
     "Collector",
+    "DEFAULT_BUCKETS_US",
+    "Histogram",
+    "MetricsRegistry",
     "PROFILE_ENV",
     "complete",
     "counter",
@@ -43,6 +48,7 @@ __all__ = [
     "enabled",
     "event",
     "gauge",
+    "observe",
     "profiled",
     "scoped",
     "span",

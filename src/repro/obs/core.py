@@ -39,6 +39,8 @@ from contextlib import contextmanager
 from time import perf_counter
 from typing import Any, Dict, Iterator, List, Optional
 
+from .metrics import MetricsRegistry
+
 PROFILE_ENV = "REPRO_PROFILE"
 
 __all__ = [
@@ -52,6 +54,7 @@ __all__ = [
     "enabled",
     "event",
     "gauge",
+    "observe",
     "profiled",
     "scoped",
     "span",
@@ -59,13 +62,15 @@ __all__ = [
 
 
 class Collector:
-    """Thread-safe sink for spans, instants, counters and gauges."""
+    """Thread-safe sink for spans, instants, counters, gauges and the
+    metrics registry (histograms — see `repro.obs.metrics`)."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self.events: List[Dict[str, Any]] = []
         self.counters: Dict[str, float] = {}
         self.gauges: Dict[str, float] = {}
+        self.metrics = MetricsRegistry()
 
     # -- events ---------------------------------------------------------
     def complete(
@@ -125,6 +130,7 @@ class Collector:
             for k, v in other.counters.items():
                 self.counters[k] = self.counters.get(k, 0.0) + v
             self.gauges.update(other.gauges)
+        self.metrics.merge(other.metrics)  # registry has its own lock
 
 
 class _Span:
@@ -232,6 +238,15 @@ def gauge(name: str, value: float) -> None:
     col = _active
     if col is not None:
         col.set_gauge(name, value)
+
+
+def observe(name: str, value: float) -> None:
+    """Record one sample into the active collector's named histogram
+    (microseconds by repo convention).  No-op when telemetry is off —
+    same zero-cost contract as `span()`."""
+    col = _active
+    if col is not None:
+        col.metrics.observe(name, value)
 
 
 @contextmanager

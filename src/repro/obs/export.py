@@ -7,6 +7,8 @@ repro-specific scalars:
 
 * ``repro.counters`` / ``repro.gauges`` — flat metrics summary.
 * ``repro.phases`` — per-phase totals (also derivable from the events).
+* ``repro.metrics`` — the collector's :class:`MetricsRegistry` snapshot
+  (histograms with bucket arrays and p50/p99; see `repro.obs.metrics`).
 
 Every span becomes a ``ph:"X"`` complete event.  Lanes map to ``tid``s
 in order of first appearance, each named via a ``ph:"M"``
@@ -24,7 +26,8 @@ from .core import Collector
 
 PID = 1
 
-__all__ = ["chrome_trace", "events_from_chrome", "load_profile", "write_profile"]
+__all__ = ["chrome_trace", "events_from_chrome", "load_profile",
+           "timeline_trace", "write_profile"]
 
 
 def _phase_totals(events: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
@@ -81,6 +84,7 @@ def chrome_trace(col: Collector) -> Dict[str, Any]:
             "counters": dict(col.counters),
             "gauges": dict(col.gauges),
             "phases": _phase_totals(col.events),
+            "metrics": col.metrics.snapshot(),
         },
     }
 
@@ -109,6 +113,49 @@ def events_from_chrome(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
             }
         )
     return out
+
+
+def timeline_trace(timeline: Dict[str, Any]) -> Dict[str, Any]:
+    """Reconstruct a Perfetto-loadable trace from a dist *round
+    timeline* (the ``timeline=`` dict `dist_vertex_cut` fills, also
+    persisted in ``BENCH_dist_scaling.json`` meta).
+
+    The timeline records durations, not wall-clock timestamps, so the
+    tracks are synthetic: each round lays ``parse_wait`` then ``merge``
+    on the ``coord`` lane and the per-worker ``cut`` spans in parallel
+    on ``cut/wN`` lanes, advancing a cumulative clock by the round's
+    critical path (parse_wait + max cut + merge) — the idealized
+    dataflow the recorded durations imply.  A trailing ``finalize``
+    span closes the coord lane when the timeline carries
+    ``finalize_us``.
+    """
+    col = Collector()
+    t = 0.0                                     # seconds, rebased at 0
+    for rnd in timeline.get("rounds") or []:
+        r = rnd.get("round", 0)
+        pw = float(rnd.get("parse_wait_us", 0.0)) / 1e6
+        if pw > 0:
+            col.complete("dist.parse_wait", t, t + pw, lane="coord",
+                         cat="wait", round=r)
+        t += pw
+        cuts = [float(u) / 1e6 for u in rnd.get("cut_us", [])]
+        for w, cu in enumerate(cuts):
+            col.complete("dist.cut", t, t + cu, lane=f"cut/w{w}",
+                         cat="op", round=r,
+                         edges=rnd.get("edges"))
+        t += max(cuts, default=0.0)
+        mu = float(rnd.get("merge_us", 0.0)) / 1e6
+        if mu > 0:
+            col.complete("dist.merge", t, t + mu, lane="coord", cat="op",
+                         round=r, full=bool(rnd.get("full_merge")))
+        t += mu
+    fu = float(timeline.get("finalize_us") or 0.0) / 1e6
+    if fu > 0:
+        col.complete("dist.finalize", t, t + fu, lane="coord", cat="op")
+    for key in ("workers", "merge_period", "full_merges", "round_merges"):
+        if isinstance(timeline.get(key), (int, float)):
+            col.set_gauge(f"timeline.{key}", timeline[key])
+    return chrome_trace(col)
 
 
 def write_profile(path: str, col: Collector) -> None:

@@ -11,6 +11,13 @@ Subcommands:
          is ``{"source": path, "p": int, "method": ..., "lam": ...}``
 
   cache  list the fingerprints committed in a cache directory
+
+  metrics  replay an optional JSON request list, then print the live
+           `PlanService.metrics()` snapshot (hit rate, plans/s,
+           plan-latency p50/p99, evictions)::
+
+             python -m repro.serve metrics requests.json \
+                 --max-hot-entries 64
 """
 from __future__ import annotations
 
@@ -20,6 +27,17 @@ import sys
 
 from .cache import PlanCache
 from .service import DEFAULT_CACHE_DIR, PlanRequest, PlanService
+
+
+def _parse_requests(entries) -> list:
+    """JSON request entries -> PlanRequest list (shared by batch/metrics)."""
+    return [PlanRequest(source=e["source"], p=int(e["p"]),
+                        method=e.get("method", "wb_libra"),
+                        lam=float(e.get("lam", 1.0)),
+                        seed=int(e.get("seed", 0)),
+                        edge_order=e.get("edge_order", "auto"),
+                        weight_model=e.get("weight_model", "bytes"))
+            for e in entries]
 
 
 def _add_knobs(ap) -> None:
@@ -36,6 +54,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.serve")
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR)
     ap.add_argument("--backend", default="fast")
+    ap.add_argument("--max-hot-entries", type=int, default=None,
+                    help="LRU bound on the in-memory hot map (entries)")
+    ap.add_argument("--max-hot-bytes", type=int, default=None,
+                    help="LRU bound on the in-memory hot map (bytes)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     s = sub.add_parser("plan", help="serve one plan request")
@@ -47,6 +69,11 @@ def main(argv=None) -> int:
 
     sub.add_parser("cache", help="list committed plan fingerprints")
 
+    m = sub.add_parser("metrics",
+                       help="replay requests, print live service metrics")
+    m.add_argument("requests", nargs="?", default=None,
+                   help="optional JSON request list to replay first")
+
     args = ap.parse_args(argv)
 
     if args.cmd == "cache":
@@ -54,7 +81,16 @@ def main(argv=None) -> int:
             print(fp)
         return 0
 
-    svc = PlanService(cache_dir=args.cache_dir, backend=args.backend)
+    svc = PlanService(cache_dir=args.cache_dir, backend=args.backend,
+                      max_hot_entries=args.max_hot_entries,
+                      max_hot_bytes=args.max_hot_bytes)
+    if args.cmd == "metrics":
+        if args.requests:
+            with open(args.requests) as f:
+                entries = json.load(f)
+            svc.plan_many(_parse_requests(entries))
+        print(json.dumps(svc.metrics(), indent=2, default=float))
+        return 0
     if args.cmd == "plan":
         req = PlanRequest(source=args.source, p=args.p,
                           method=args.method, lam=args.lam,
@@ -70,14 +106,7 @@ def main(argv=None) -> int:
         print("batch: the requests file must hold a JSON list",
               file=sys.stderr)
         return 1
-    reqs = [PlanRequest(source=e["source"], p=int(e["p"]),
-                        method=e.get("method", "wb_libra"),
-                        lam=float(e.get("lam", 1.0)),
-                        seed=int(e.get("seed", 0)),
-                        edge_order=e.get("edge_order", "auto"),
-                        weight_model=e.get("weight_model", "bytes"))
-            for e in entries]
-    out = [r.summary() for r in svc.plan_many(reqs)]
+    out = [r.summary() for r in svc.plan_many(_parse_requests(entries))]
     print(json.dumps({"responses": out, "stats": svc.stats()},
                      indent=2, default=float))
     return 0

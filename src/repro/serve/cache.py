@@ -13,10 +13,16 @@ that the next manager GCs, and restarts are warm — a new service over
 the same root serves every previously-planned fingerprint from disk.
 
 An in-memory hot map (fingerprint -> bundle) sits in front of the disk
-layer so repeat hits are dictionary lookups.
+layer so repeat hits are dictionary lookups.  The hot map is LRU-bounded
+(``max_entries`` / ``max_bytes``): a long-lived service over an
+unbounded request universe must not grow without limit, and an evicted
+bundle is never lost — it reloads from the checkpoint store on the next
+request.  Evictions are counted into the owning service's metrics
+registry when one is injected.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 
@@ -71,15 +77,54 @@ class PlanBundle:
 
 
 class PlanCache:
-    """Two-tier plan cache: in-memory hot map over the checkpoint store."""
+    """Two-tier plan cache: LRU hot map over the checkpoint store.
 
-    def __init__(self, root: str):
+    ``max_entries`` / ``max_bytes`` bound the hot map (None = unbounded);
+    the least-recently-used bundle is dropped first, counted as
+    ``serve.cache.evictions`` in the injected ``metrics`` registry.
+    """
+
+    def __init__(self, root: str, max_entries: "int | None" = None,
+                 max_bytes: "int | None" = None, metrics=None):
         self.root = root
         os.makedirs(root, exist_ok=True)
-        self._hot: dict = {}
+        self._hot: "collections.OrderedDict[str, PlanBundle]" = \
+            collections.OrderedDict()
+        self._hot_bytes = 0
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.metrics = metrics          # MetricsRegistry or None
+        self.evictions = 0
 
     def _manager(self, fp: str) -> CheckpointManager:
         return CheckpointManager(os.path.join(self.root, fp), keep=1)
+
+    @staticmethod
+    def _bundle_nbytes(bundle: PlanBundle) -> int:
+        return sum(np.asarray(getattr(bundle, k)).nbytes
+                   for k in _ARRAY_FIELDS)
+
+    def _remember(self, fp: str, bundle: PlanBundle) -> None:
+        if fp in self._hot:
+            self._hot.move_to_end(fp)
+            return
+        self._hot[fp] = bundle
+        self._hot_bytes += self._bundle_nbytes(bundle)
+        while self._hot and (
+                (self.max_entries is not None
+                 and len(self._hot) > self.max_entries)
+                or (self.max_bytes is not None
+                    and self._hot_bytes > self.max_bytes)):
+            _old_fp, old = self._hot.popitem(last=False)
+            self._hot_bytes -= self._bundle_nbytes(old)
+            self.evictions += 1
+            obs.counter("serve.cache_evict", 1)
+            if self.metrics is not None:
+                self.metrics.counter("serve.cache.evictions")
+
+    @property
+    def hot_bytes(self) -> int:
+        return self._hot_bytes
 
     def fingerprints(self) -> list:
         """Fingerprints with a committed bundle on disk."""
@@ -94,6 +139,7 @@ class PlanCache:
         """Hot map, then disk; returns None on a miss."""
         bundle = self._hot.get(fp)
         if bundle is not None:
+            self._hot.move_to_end(fp)       # LRU recency
             obs.counter("serve.cache_hit_memory", 1)
             return bundle
         mgr = self._manager(fp)
@@ -110,12 +156,12 @@ class PlanCache:
             total_weight=float(meta["total_weight"]),
             p=int(meta["p"]), method=str(meta["method"]),
             lam=float(meta["lam"]))
-        self._hot[fp] = bundle
+        self._remember(fp, bundle)
         obs.counter("serve.cache_hit_disk", 1)
         return bundle
 
     def put(self, fp: str, bundle: PlanBundle) -> None:
-        self._hot[fp] = bundle
+        self._remember(fp, bundle)
         flat = {k: np.asarray(getattr(bundle, k)) for k in _ARRAY_FIELDS}
         meta = {"exec_time": bundle.exec_time,
                 "comm_bytes": bundle.comm_bytes,

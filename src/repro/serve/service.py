@@ -15,13 +15,22 @@ fingerprints inside one batch plan once.
 Every phase is instrumented through `repro.obs`: cache hit/miss/store
 counters, fingerprint/load/plan spans — `REPRO_PROFILE=out.json` (or
 `obs.scoped()`) captures a serving profile.
+
+Beyond the profiling-gated spans, the service owns an **always-on**
+:class:`~repro.obs.metrics.MetricsRegistry` (`PlanService.registry`):
+per-tier request counters, hot-map eviction counts, and per-tier plan
+latency histograms, summarised live by :meth:`PlanService.metrics`
+(hit rate, plans/s, latency p50/p99) and surfaced by
+``python -m repro.serve metrics``.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+from time import perf_counter
 
 from .. import obs
+from ..obs.metrics import MetricsRegistry
 from ..core.mapping import Machine
 from ..core.simulator import coerce_graph
 from ..core.vertex_cut import vertex_cut
@@ -70,13 +79,25 @@ class PlanService:
 
     def __init__(self, cache_dir: str = DEFAULT_CACHE_DIR,
                  backend: str = "fast", machine: "Machine | None" = None,
-                 use_stat_memo: bool = True):
-        self.cache = PlanCache(cache_dir)
+                 use_stat_memo: bool = True,
+                 max_hot_entries: "int | None" = None,
+                 max_hot_bytes: "int | None" = None):
+        self.registry = MetricsRegistry()   # always on, never profiling-gated
+        self.cache = PlanCache(cache_dir, max_entries=max_hot_entries,
+                               max_bytes=max_hot_bytes,
+                               metrics=self.registry)
         self.backend = backend
         self.machine = machine
         self.use_stat_memo = use_stat_memo
         self.hits = 0
         self.misses = 0
+        self._t0 = perf_counter()
+
+    def _record(self, tier: str, us: float) -> None:
+        """Per-tier request accounting into the live registry."""
+        self.registry.counter(f"serve.plans.{tier}")
+        self.registry.observe("serve.plan_latency_us", us)
+        self.registry.observe(f"serve.plan_latency_us.{tier}", us)
 
     # ------------------------------------------------------------------ #
     def _fingerprint(self, req: PlanRequest) -> str:
@@ -115,18 +136,20 @@ class PlanService:
     # ------------------------------------------------------------------ #
     def plan(self, req: PlanRequest) -> PlanResponse:
         """Serve one request: cache hit or cold plan + persist."""
+        t0 = perf_counter()
         fp = self._fingerprint(req)
         in_memory = fp in self.cache._hot
         bundle = self.cache.get(fp)
         if bundle is not None:
             self.hits += 1
-            return PlanResponse(fingerprint=fp,
-                                cache="memory" if in_memory else "disk",
-                                bundle=bundle)
+            tier = "memory" if in_memory else "disk"
+            self._record(tier, (perf_counter() - t0) * 1e6)
+            return PlanResponse(fingerprint=fp, cache=tier, bundle=bundle)
         self.misses += 1
         obs.counter("serve.cache_miss", 1)
         bundle = self._plan_cold(req)
         self.cache.put(fp, bundle)
+        self._record("cold", (perf_counter() - t0) * 1e6)
         return PlanResponse(fingerprint=fp, cache="cold", bundle=bundle)
 
     def plan_many(self, requests) -> list:
@@ -137,12 +160,14 @@ class PlanService:
             responses: list = [None] * len(requests)
             first_of: dict = {}
             for i, req in enumerate(requests):
+                t0 = perf_counter()
                 fp = self._fingerprint(req)
                 prior = first_of.get(fp)
                 if prior is not None:
                     # in-batch duplicate: by the time we got here the
                     # first occurrence has populated the hot map
                     self.hits += 1
+                    self._record("memory", (perf_counter() - t0) * 1e6)
                     responses[i] = PlanResponse(
                         fingerprint=fp, cache="memory",
                         bundle=responses[prior].bundle)
@@ -152,15 +177,16 @@ class PlanService:
                 bundle = self.cache.get(fp)
                 if bundle is not None:
                     self.hits += 1
-                    responses[i] = PlanResponse(
-                        fingerprint=fp,
-                        cache="memory" if in_memory else "disk",
-                        bundle=bundle)
+                    tier = "memory" if in_memory else "disk"
+                    self._record(tier, (perf_counter() - t0) * 1e6)
+                    responses[i] = PlanResponse(fingerprint=fp, cache=tier,
+                                                bundle=bundle)
                     continue
                 self.misses += 1
                 obs.counter("serve.cache_miss", 1)
                 bundle = self._plan_cold(requests[i])
                 self.cache.put(fp, bundle)
+                self._record("cold", (perf_counter() - t0) * 1e6)
                 responses[i] = PlanResponse(fingerprint=fp, cache="cold",
                                             bundle=bundle)
         return responses
@@ -168,5 +194,36 @@ class PlanService:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "hot_entries": len(self.cache._hot),
+                "hot_bytes": self.cache.hot_bytes,
+                "evictions": self.cache.evictions,
                 "disk_entries": len(self.cache.fingerprints()),
                 "cache_dir": self.cache.root}
+
+    def metrics(self) -> dict:
+        """Live serving metrics from the always-on registry: request
+        counts by tier, cache hit rate, sustained plans/s since service
+        start, and plan-latency p50/p99 (overall and per tier)."""
+        snap = self.registry.snapshot()
+        total = self.hits + self.misses
+        elapsed = max(perf_counter() - self._t0, 1e-9)
+        lat = snap["histograms"].get("serve.plan_latency_us")
+        tiers = {}
+        for tier in ("memory", "disk", "cold"):
+            h = snap["histograms"].get(f"serve.plan_latency_us.{tier}")
+            if h is not None:
+                tiers[tier] = {"count": h["count"], "p50_us": h["p50"],
+                               "p99_us": h["p99"]}
+        return {
+            "plans": total,
+            "plans_per_s": round(total / elapsed, 3),
+            "uptime_s": round(elapsed, 3),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": round(self.hits / total, 4) if total else 0.0,
+            "evictions": self.cache.evictions,
+            "hot_entries": len(self.cache._hot),
+            "hot_bytes": self.cache.hot_bytes,
+            "plan_latency_p50_us": lat["p50"] if lat else 0.0,
+            "plan_latency_p99_us": lat["p99"] if lat else 0.0,
+            "tiers": tiers,
+        }
